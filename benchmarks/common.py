@@ -1,0 +1,45 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import Policy, generate_taskset, simulate, workload_library
+
+LIB = workload_library(include_archs=True)
+SIM_LIB = {k: v for k, v in LIB.items() if not k.startswith("arch:")}
+
+DEFAULT_SETS = 100          # paper: 1000 (use --full)
+UTILS = (0.5, 0.6, 0.7, 0.8, 0.9, 0.95)
+
+
+def run_many(policy: Policy, *, n_sets: int, u: float, gamma: float = 0.5,
+             n_tasks: int = 10, duration: float = 2e8, cf: float = 2.0,
+             overrun_prob: float = 0.3, seed0: int = 0) -> List:
+    out = []
+    for s in range(n_sets):
+        tasks = generate_taskset(u, gamma=gamma, n_tasks=n_tasks, cf=cf,
+                                 seed=seed0 + s, programs=SIM_LIB)
+        out.append(simulate(tasks, SIM_LIB, policy, duration=duration,
+                            seed=seed0 + s, overrun_prob=overrun_prob,
+                            cf=cf))
+    return out
+
+
+def mean(xs) -> float:
+    return float(np.mean(xs)) if len(xs) else 0.0
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.time() - self.t0
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,47 @@
+"""Fig. 10 — survivability of LO-tasks in HI-mode vs gamma / beta.
+
+Survivability = completed / released LO jobs while the system is degraded
+(paper SS VIII.D; Obs. 5: >20% even at extreme gamma)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import Policy
+from benchmarks.common import DEFAULT_SETS, Timer, emit, mean, run_many
+
+GAMMAS = (0.2, 0.4, 0.5, 0.6, 0.8)
+BETAS = (4, 8, 10, 14, 20)
+
+
+def _surv(ms):
+    rel = sum(m.lo_released_in_hi for m in ms)
+    done = sum(m.lo_done_in_hi for m in ms)
+    return done / rel if rel else float("nan")
+
+
+def main(full: bool = False):
+    n_sets = 400 if full else max(DEFAULT_SETS // 2, 30)
+    u = 0.8
+    out = {}
+    with Timer() as t:
+        print("gamma,survivability")
+        for g in GAMMAS:
+            ms = run_many(Policy.mesc(), n_sets=n_sets, u=u, gamma=g,
+                          overrun_prob=0.5)
+            out[("gamma", g)] = _surv(ms)
+            print(f"{g},{out[('gamma', g)]:.3f}")
+        print("beta,survivability")
+        for b in BETAS:
+            ms = run_many(Policy.mesc(), n_sets=n_sets, u=u, n_tasks=b,
+                          overrun_prob=0.5)
+            out[("beta", b)] = _surv(ms)
+            print(f"{b},{out[('beta', b)]:.3f}")
+    worst = np.nanmin([v for v in out.values()])
+    emit("fig10_survivability",
+         t.seconds * 1e6 / ((len(GAMMAS) + len(BETAS)) * n_sets),
+         f"worst_survivability={worst:.2f}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Fig. 2 — execution cycles of workloads / operators / instructions.
+
+Reproduces the three panels: (a) whole-workload cycles per size bucket,
+(b) operator-level cycles, (c) per-instruction cycles by type — the
+quantitative motivation for instruction-level preemption.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import LIB, Timer, emit
+
+
+def main(full: bool = False):
+    rows = []
+    with Timer() as t:
+        for name, prog in sorted(LIB.items()):
+            ops = prog.operator_cycle_sizes()
+            hist = prog.instruction_cost_histogram()
+            inst_max = prog.max_instruction_cycles
+            inst_mean = (sum(c * n for arr in hist.values() for c, n in arr)
+                         / max(prog.n_instructions, 1))
+            bucket = ("small" if prog.total_cycles <= 1e6 else
+                      "medium" if prog.total_cycles <= 1e7 else "large")
+            rows.append((name, bucket, prog.total_cycles, int(ops.max()),
+                         int(ops.mean()), inst_max, round(inst_mean, 1)))
+    print("workload,bucket,total_cycles,op_max,op_mean,inst_max,inst_mean")
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    tot = np.array([r[2] for r in rows], float)
+    opm = np.array([r[3] for r in rows], float)
+    im = np.array([r[5] for r in rows], float)
+    ratio_wo = np.median(tot / opm)
+    ratio_oi = np.median(opm / im)
+    emit("fig2_instruction_costs", t.seconds * 1e6 / max(len(rows), 1),
+         f"workload/op={ratio_wo:.0f}x;op/inst={ratio_oi:.0f}x")
+    return {"ratio_workload_op": ratio_wo, "ratio_op_inst": ratio_oi}
+
+
+if __name__ == "__main__":
+    main()

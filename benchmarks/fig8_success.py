@@ -1,0 +1,40 @@
+"""Fig. 8 — successful ratio vs total utilisation.
+
+Systems: MESC (with CS), MESC without CS (non-preemptive), AMC with CS,
+AMC without CS.  Success = no task misses a deadline during the run
+(HI-scope success also reported)."""
+from __future__ import annotations
+
+from repro.core import Policy
+from benchmarks.common import DEFAULT_SETS, Timer, UTILS, emit, run_many
+
+SYSTEMS = (("mesc", Policy.mesc()),
+           ("mesc_noCS", Policy.non_preemptive()),
+           ("amc_CS", Policy.amc()),
+           ("amc_noCS", Policy(preemption="none", drop_lo_in_hi=True,
+                               name="amc-np")))
+
+
+def main(full: bool = False):
+    n_sets = 1000 if full else DEFAULT_SETS
+    print("u," + ",".join(n for n, _ in SYSTEMS)
+          + "," + ",".join(n + "_hi" for n, _ in SYSTEMS))
+    res = {}
+    with Timer() as t:
+        for u in UTILS:
+            row_all, row_hi = [], []
+            for name, pol in SYSTEMS:
+                ms = run_many(pol, n_sets=n_sets, u=u)
+                row_all.append(sum(m.success() for m in ms) / len(ms))
+                row_hi.append(sum(m.success("HI") for m in ms) / len(ms))
+                res[(name, u)] = (row_all[-1], row_hi[-1])
+            print(f"{u}," + ",".join(f"{x:.3f}" for x in row_all + row_hi))
+    mesc95 = res[("mesc", 0.95)][1]
+    nocs85 = res[("mesc_noCS", 0.9)][1]
+    emit("fig8_success", t.seconds * 1e6 / (len(UTILS) * len(SYSTEMS) * n_sets),
+         f"mesc_hi@0.95={mesc95:.2f};noCS_hi@0.9={nocs85:.2f}")
+    return res
+
+
+if __name__ == "__main__":
+    main()

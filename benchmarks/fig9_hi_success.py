@@ -1,0 +1,38 @@
+"""Fig. 9 — HI-mode successful ratio under varying gamma (HI share) and
+beta (tasks per set)."""
+from __future__ import annotations
+
+from repro.core import Policy
+from benchmarks.common import DEFAULT_SETS, Timer, emit, run_many
+
+GAMMAS = (0.2, 0.4, 0.5, 0.6, 0.8)
+BETAS = (4, 8, 10, 14, 20)
+
+
+def main(full: bool = False):
+    n_sets = 400 if full else max(DEFAULT_SETS // 2, 30)
+    u = 0.8
+    out = {}
+    with Timer() as t:
+        print("gamma,hi_success")
+        for g in GAMMAS:
+            ms = run_many(Policy.mesc(), n_sets=n_sets, u=u, gamma=g)
+            r = sum(m.success("HI") for m in ms) / len(ms)
+            out[("gamma", g)] = r
+            print(f"{g},{r:.3f}")
+        print("beta,hi_success")
+        for b in BETAS:
+            ms = run_many(Policy.mesc(), n_sets=n_sets, u=u, n_tasks=b)
+            r = sum(m.success("HI") for m in ms) / len(ms)
+            out[("beta", b)] = r
+            print(f"{b},{r:.3f}")
+    drop_g = out[("gamma", 0.2)] - out[("gamma", 0.8)]
+    spread_b = max(out[(k, b)] for k, b in out if k == "beta") - \
+        min(out[(k, b)] for k, b in out if k == "beta")
+    emit("fig9_hi_success", t.seconds * 1e6 / ((len(GAMMAS) + len(BETAS)) * n_sets),
+         f"gamma_drop={drop_g:.2f};beta_spread={spread_b:.2f}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

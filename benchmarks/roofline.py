@@ -1,0 +1,137 @@
+"""Roofline analysis (deliverable g) from the dry-run artifacts.
+
+Per (arch x shape) cell on the 16x16 mesh:
+  compute    = FLOPs/device   / 197 TFLOP/s   (bf16, TPU v5e)
+  memory     = bytes/device   / 819 GB/s      (HBM)
+  collective = link-bytes/dev / 50 GB/s       (per-link ICI)
+
+FLOPs/bytes per device come from the trip-count-corrected HLO text
+analysis (cross-validated against the unrolled single-device cost probe —
+agreement within ~1%; see runtime/hlo_analysis.py).  The memory term is an
+upper bound at CPU-XLA fusion granularity (DESIGN.md SS7).
+
+MODEL_FLOPS = 6*N*D (train) / 2*N*D (prefill/decode), N = active params —
+the ratio against compiled FLOPs exposes remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import ARCHS, SHAPES_BY_NAME, supports_shape
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+LINK_BW = 50e9               # B/s / ICI link
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+OUT_MD = Path(__file__).resolve().parents[1] / "results" / "roofline.md"
+
+SHAPE_ORDER = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = ARCHS[arch]
+    shape = SHAPES_BY_NAME[shape_name]
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.tokens
+    return 2.0 * n * shape.global_batch          # decode: one token / seq
+
+
+def suggestion(dom: str, arch: str, shape: str) -> str:
+    if dom == "collective":
+        return ("reduce weight re-gathers (remat policy / int8 FSDP gathers)"
+                if "train" in shape else
+                "co-locate cache shards with attention (less resharding)")
+    if dom == "memory":
+        return ("fuse attention/softmax chains (Pallas flash kernel)"
+                if "train" in shape or "prefill" in shape else
+                "fused decode-attention kernel: read cache once")
+    return "MXU-align tile shapes; skip masked causal blocks"
+
+
+def load_cells(pod: str = "pod1"):
+    cells = []
+    for arch in sorted(ARCHS):
+        for shape in SHAPE_ORDER:
+            if not supports_shape(ARCHS[arch], SHAPES_BY_NAME[shape]):
+                cells.append((arch, shape, None))
+                continue
+            p = RESULTS / f"{arch}__{shape}__{pod}.json"
+            cells.append((arch, shape,
+                          json.loads(p.read_text()) if p.exists() else None))
+    return cells
+
+
+def analyze_cell(arch: str, shape: str, d: dict) -> dict:
+    n_dev = d.get("n_devices", 256)
+    fl = d.get("hlo_text_flops_per_device", 0.0)
+    by = d.get("hlo_text_bytes_no_copies",
+               d.get("hlo_text_bytes_per_device", 0.0))
+    cl = d.get("collective_link_bytes", 0.0)
+    t_c = fl / PEAK_FLOPS
+    t_m = by / HBM_BW
+    t_l = cl / LINK_BW
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_l),
+              key=lambda kv: kv[1])[0]
+    mf = model_flops(arch, shape)
+    hlo_global = fl * n_dev
+    ratio = mf / hlo_global if hlo_global else 0.0
+    bound = max(t_c, t_m, t_l)
+    frac = t_c / bound if bound else 0.0     # roofline fraction (compute)
+    return {"arch": arch, "shape": shape, "compute_s": t_c, "memory_s": t_m,
+            "collective_s": t_l, "dominant": dom, "model_flops": mf,
+            "useful_ratio": ratio, "roofline_fraction": frac,
+            "hbm_gib": d.get("per_device_hbm_bytes", 0) / 2 ** 30,
+            "fits": d.get("per_device_hbm_bytes", 0) < 16 * 2 ** 30,
+            "status": d.get("status")}
+
+
+def main(full: bool = False):
+    cells = load_cells()
+    rows = []
+    print("arch,shape,compute_ms,memory_ms,collective_ms,dominant,"
+          "useful_ratio,roofline_frac,hbm_gib,fits")
+    md = ["| arch | shape | compute | memory | collective | dominant | "
+          "useful | roofline | HBM | fix |",
+          "|---|---|---|---|---|---|---|---|---|---|"]
+    for arch, shape, d in cells:
+        if d is None:
+            sk = "SKIP(sub-quadratic-only)" \
+                if not supports_shape(ARCHS[arch], SHAPES_BY_NAME[shape]) \
+                else "MISSING"
+            print(f"{arch},{shape},{sk},,,,,,,")
+            md.append(f"| {arch} | {shape} | {sk} | | | | | | | |")
+            continue
+        if d.get("status") != "ok":
+            print(f"{arch},{shape},ERROR,,,,,,,")
+            md.append(f"| {arch} | {shape} | ERROR | | | | | | | |")
+            continue
+        r = analyze_cell(arch, shape, d)
+        rows.append(r)
+        print(f"{arch},{shape},{r['compute_s']*1e3:.1f},"
+              f"{r['memory_s']*1e3:.1f},{r['collective_s']*1e3:.1f},"
+              f"{r['dominant']},{r['useful_ratio']:.3f},"
+              f"{r['roofline_fraction']:.3f},{r['hbm_gib']:.2f},{r['fits']}")
+        md.append(
+            f"| {arch} | {shape} | {r['compute_s']*1e3:.1f} ms "
+            f"| {r['memory_s']*1e3:.1f} ms | {r['collective_s']*1e3:.1f} ms "
+            f"| **{r['dominant']}** | {r['useful_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.2f} | {r['hbm_gib']:.1f} GiB "
+            f"| {suggestion(r['dominant'], arch, shape)} |")
+    OUT_MD.parent.mkdir(exist_ok=True)
+    OUT_MD.write_text("\n".join(md) + "\n")
+    n_fit = sum(r["fits"] for r in rows)
+    doms = {d: sum(1 for r in rows if r["dominant"] == d)
+            for d in ("compute", "memory", "collective")}
+    from benchmarks.common import emit
+    emit("roofline", 0.0,
+         f"cells={len(rows)};fit16GB={n_fit};dominant={doms}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV summary lines (plus the per-figure
+CSV blocks above them).  ``--full`` uses the paper's 1000 task sets per
+point (slow); default is a statistically-meaningful reduction.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale experiment sizes (1000 task sets)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset (fig2,fig7,fig8,fig9,"
+                         "fig10,overhead,roofline)")
+    args = ap.parse_args()
+
+    from benchmarks import (fig2_instruction_costs, fig6_banks,
+                            fig7_blocking, fig8_success, fig9_hi_success,
+                            fig10_survivability, tbl_overhead, roofline)
+    table = {
+        "fig2": fig2_instruction_costs.main,
+        "fig6": fig6_banks.main,
+        "fig7": fig7_blocking.main,
+        "fig8": fig8_success.main,
+        "fig9": fig9_hi_success.main,
+        "fig10": fig10_survivability.main,
+        "overhead": tbl_overhead.main,
+        "roofline": roofline.main,
+    }
+    only = args.only.split(",") if args.only else list(table)
+    print("name,us_per_call,derived")
+    for name in only:
+        print(f"# === {name} ===", file=sys.stderr)
+        try:
+            table[name](full=args.full)
+        except Exception as e:  # keep the harness going
+            print(f"{name},0,ERROR:{type(e).__name__}:{e}")
+
+
+if __name__ == "__main__":
+    main()

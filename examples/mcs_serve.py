@@ -1,0 +1,16 @@
+"""End-to-end driver (the paper's system): mixed-criticality serving of a
+small model with batched requests under the MESC scheduler, versus a
+non-preemptive accelerator baseline.
+
+HI-criticality requests preempt LO requests at instruction (decode-step)
+boundaries; request KV caches live in a bounded "bank pool" of device
+slots managed like the Gemmini^RT scratchpad (context save = cache to host
+DRAM).  Reported: time-to-first-token and completion latency per
+criticality — the serving analogue of the paper's Fig. 7 blocking numbers.
+
+    PYTHONPATH=src python examples/mcs_serve.py
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Instruction-level preemption INSIDE a single GEMM — the Pallas analogue
+of Gemmini^RT's step_wise_mvout of the accumulator (paper SS V.A).
+
+A high-criticality request arrives while a large GEMM streams through the
+"systolic array".  Instead of waiting for the full product (non-preemptive)
+or restarting it later (kill-based), MESC saves the partial fp32
+accumulator at a K-block boundary, runs the HI work, and resumes exactly
+where it stopped.
+
+    PYTHONPATH=src python examples/preemptible_gemm.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.systolic_gemm import gemm_partial
+from repro.core import Instruction, Op
+from repro.core.executor import GemminiRT
+from repro.core.task import Crit, TaskParams, TCB
+
+
+def main():
+    M = K = N = 1024
+    bk = 128
+    nk = K // bk
+    key = jax.random.PRNGKey(0)
+    A = jax.random.normal(key, (M, K), jnp.float32)
+    B = jax.random.normal(jax.random.fold_in(key, 1), (K, N), jnp.float32)
+    want = np.asarray(A @ B)
+
+    # LO task starts the big GEMM; after 3 of 8 K-blocks a HI task arrives
+    acc = jnp.zeros((M, N), jnp.float32)
+    t0 = time.time()
+    acc = gemm_partial(A, B, acc, 0, 3, bk=bk, interpret=True)
+
+    # --- preemption: freeze, save accumulator ("step_wise_mvout") ---
+    hw = GemminiRT()
+    lo = TCB(params=TaskParams(0, 5, 1e9, 1e9, 1e6, 2e6, Crit.LO, 2,
+                               workload="big_gemm"))
+    hw.accum_bytes_used[0] = acc.size * 4 % (64 * 1024)
+    saved = np.asarray(acc)                   # accumulator -> DRAM
+    br = hw.context_save(lo, drain_cycles=bk + 32, next_eta=2)
+    print(f"context save: {br.total} cycles "
+          f"(drain={br.drain}, acc={br.accumulator}, cfg={br.config_buffer})")
+
+    # --- HI work runs immediately (here: a small urgent GEMM) ---
+    hi_out = jax.random.normal(key, (128, 128)) @ jax.random.normal(
+        jax.random.fold_in(key, 2), (128, 128))
+    hi_out.block_until_ready()
+    print("HI task served while LO GEMM is suspended")
+
+    # --- resume LO from the saved accumulator ---
+    rr = hw.context_restore(lo)
+    acc = gemm_partial(A, B, jnp.asarray(saved), 3, nk, bk=bk,
+                       interpret=True)
+    err = float(np.max(np.abs(np.asarray(acc) - want)))
+    print(f"context restore: {rr.total} cycles;  resumed GEMM max|err| "
+          f"vs uninterrupted = {err:.2e}")
+    assert err < 1e-2
+    print("preempt/resume exact — the GEMM never restarted from scratch")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.checkpointing.checkpoint import (save_checkpoint, load_checkpoint,
+                                            latest_step, CheckpointManager)

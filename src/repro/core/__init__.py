@@ -1,0 +1,22 @@
+"""MESC core: instruction-level preemption for streaming accelerators.
+
+The paper's contribution as a composable library:
+  isa/program   — Gemmini^RT ISA + workload->instruction-stream compiler
+  remapper      — scratchpad bank allocation (address remapper)
+  executor      — virtual accelerator w/ config-copy buffer + context switch
+  scheduler     — Alg. 1 + LO/transition/HI mode rules (+ NP/LP/AMC baselines)
+  simulator     — cycle-level DES for the paper's experiments
+  taskgen       — UUnifast task sets (SS VIII)
+  wcrt          — response-time analysis (Eqs. 1-11)
+  monitor       — TCB registry + LO-WCET timers (real-executor path)
+"""
+from repro.core.isa import Instruction, Op
+from repro.core.program import Program, build_program, workload_library
+from repro.core.remapper import AddressRemapper
+from repro.core.executor import GemminiRT
+from repro.core.scheduler import Mode, Policy, pick_next
+from repro.core.simulator import MCSSimulator, RunMetrics, simulate
+from repro.core.task import Crit, Status, TCB, TaskParams
+from repro.core.taskgen import generate_taskset, uunifast
+from repro.core.wcrt import AnalysisConstants, analyze, longest_instruction
+from repro.core.monitor import TaskMonitor

@@ -1,0 +1,123 @@
+"""The address remapper (paper SS V.C).
+
+Transitions Gemmini's explicit scratchpad addressing to a *semi-explicit*
+form: DMA streams into the scratchpad are intercepted and redirected (via a
+dynamic offset) into banks that are either partially filled and locked by
+the task, or currently unlocked.  A 4 KB remapping block records
+logical->physical ranges; banklock semaphores mark banks holding valid data.
+
+The OS-visible contract: the scheduler only tracks *how many* banks a task
+holds (eta_i) — which banks and at what offsets is resolved in hardware.
+When local memory suffices, a context switch needs **zero scratchpad data
+movement** (the next task simply locks other banks) — that is the paper's
+20-30 % context-switch acceleration (Obs. 1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.isa import BANK_BYTES, REMAP_BLOCK_BYTES, SCRATCHPAD_BANKS
+
+
+@dataclasses.dataclass
+class Bank:
+    idx: int
+    owner: Optional[int] = None      # task id holding the banklock
+    used_bytes: int = 0
+
+    @property
+    def locked(self) -> bool:
+        return self.owner is not None
+
+
+class AddressRemapper:
+    """Bank allocation + logical->physical mapping."""
+
+    def __init__(self, n_banks: int = SCRATCHPAD_BANKS,
+                 bank_bytes: int = BANK_BYTES):
+        self.banks = [Bank(i) for i in range(n_banks)]
+        self.bank_bytes = bank_bytes
+        # remapping block: logical (tid, laddr_range) -> (bank, offset)
+        self.remap_block: Dict[Tuple[int, int], Tuple[int, int]] = {}
+
+    # -- queries ------------------------------------------------------------
+    def locked_banks(self, exclude_tid: Optional[int] = None) -> int:
+        return sum(1 for b in self.banks
+                   if b.locked and b.owner != exclude_tid)
+
+    def free_banks(self) -> int:
+        return sum(1 for b in self.banks if not b.locked)
+
+    def banks_of(self, tid: int) -> List[int]:
+        return [b.idx for b in self.banks if b.owner == tid]
+
+    def resident_bytes(self, tid: int) -> int:
+        return sum(b.used_bytes for b in self.banks if b.owner == tid)
+
+    def resident_tasks(self) -> List[int]:
+        return sorted({b.owner for b in self.banks if b.locked})
+
+    def fits(self, eta: int, exclude_tid: Optional[int] = None) -> bool:
+        """Paper Alg.1 line 35: next->banks + locked <= total."""
+        return eta + self.locked_banks(exclude_tid) <= len(self.banks)
+
+    # -- DMA write interception (Fig. 5.b/e) ---------------------------------
+    def write(self, tid: int, laddr: int, nbytes: int,
+              strict: bool = False) -> int:
+        """Route a DMA write; returns the physical bank.  Fills a partially
+        used locked bank of this task first, else locks a free bank.  When
+        the scratchpad is contended the write saturates (data stays in
+        DRAM) unless ``strict``."""
+        remaining = nbytes
+        last_bank = -1
+        while remaining > 0:
+            bank = next((b for b in self.banks
+                         if b.owner == tid and b.used_bytes < self.bank_bytes),
+                        None)
+            if bank is None:
+                bank = next((b for b in self.banks if not b.locked), None)
+                if bank is None:
+                    if strict:
+                        raise MemoryError(
+                            f"scratchpad exhausted for task {tid}")
+                    return last_bank
+                bank.owner = tid
+                bank.used_bytes = 0
+            take = min(remaining, self.bank_bytes - bank.used_bytes)
+            self.remap_block[(tid, laddr)] = (bank.idx, bank.used_bytes)
+            bank.used_bytes += take
+            remaining -= take
+            laddr += take
+            last_bank = bank.idx
+        return last_bank
+
+    def read(self, tid: int, laddr: int) -> Optional[Tuple[int, int]]:
+        """Consult the remapping block (Fig. 5.c/d)."""
+        return self.remap_block.get((tid, laddr))
+
+    # -- context-switch support ----------------------------------------------
+    def release(self, tid: int):
+        """Deactivate banklocks + flush the task's ranges (task end/evict)."""
+        for b in self.banks:
+            if b.owner == tid:
+                b.owner = None
+                b.used_bytes = 0
+        self.remap_block = {k: v for k, v in self.remap_block.items()
+                            if k[0] != tid}
+
+    def snapshot(self, tid: int) -> dict:
+        """Remap-block content shipped to DRAM on context save."""
+        return {k: v for k, v in self.remap_block.items() if k[0] == tid}
+
+    def restore(self, tid: int, snap: dict, nbytes: int):
+        """Re-load data on context restore into freshly allocated banks;
+        the remapping block is updated for the new physical placement."""
+        for (t, laddr) in list(snap):
+            pass  # logical ranges re-established by the writes below
+        if nbytes > 0:
+            self.write(tid, 0, nbytes)
+
+    @property
+    def remap_block_bytes(self) -> int:
+        return REMAP_BLOCK_BYTES

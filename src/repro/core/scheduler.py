@@ -1,0 +1,100 @@
+"""MESC task scheduler: Alg. 1 (Context_switch / save / restore) and the
+mode-switch rules of SS IV.
+
+  * LO-mode:   highest priority ready task runs (HI and LO alike); bank
+               allocation keeps every task at its minimal eta.
+  * Transition: HI-tasks first; LO-tasks may run only if their computation
+               data is still resident (not yet saved back), until at most
+               one LO-task has data in the accelerator -> HI-mode.
+  * HI-mode:   HI-tasks first; LO-tasks run only when no HI-task is active
+               (imprecise-MCS stance: LO is never dropped).  A LO-task
+               preempting another LO-task forces full eviction of the
+               previous LO data (<=1 resident LO-task invariant).
+  * Idle system -> revert to LO-mode.
+
+Preemption granularity is a policy knob: 'instruction' (Gemmini^RT),
+'operator' (limited preemption), 'none' (conventional NPU).  AMC baseline:
+``drop_lo_in_hi`` cancels LO jobs in HI-mode (paper Fig. 8 comparison).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Dict, List, Optional
+
+from repro.core.task import Crit, Status, TCB
+
+
+class Mode(enum.Enum):
+    LO = "LO"
+    TRANS = "transition"
+    HI = "HI"
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    preemption: str = "instruction"      # instruction | operator | none
+    use_banks: bool = True               # address remapper / bank model
+    drop_lo_in_hi: bool = False          # AMC
+    t_sr: int = 5000                     # scheduler period (cycles)
+    name: str = "mesc"
+
+    @staticmethod
+    def mesc(**kw) -> "Policy":
+        return Policy(name="mesc", **kw)
+
+    @staticmethod
+    def non_preemptive() -> "Policy":
+        return Policy(preemption="none", name="np")
+
+    @staticmethod
+    def limited() -> "Policy":
+        return Policy(preemption="operator", name="lp")
+
+    @staticmethod
+    def amc(preemption: str = "instruction") -> "Policy":
+        return Policy(preemption=preemption, drop_lo_in_hi=True,
+                      name=f"amc-{preemption}")
+
+
+ACTIVE = (Status.READY, Status.INTERRUPTED, Status.RUNNING)
+
+
+def eligible_set(tcbs: Dict[int, TCB], mode: Mode, resident: List[int],
+                 policy: Policy) -> List[TCB]:
+    """Tasks schedulable under the current mode rules (SS IV)."""
+    active = [t for t in tcbs.values() if t.status in ACTIVE]
+    hi_active = any(t.params.crit == Crit.HI for t in active)
+    out = []
+    for t in active:
+        if t.params.crit == Crit.HI or mode == Mode.LO:
+            out.append(t)
+            continue
+        if policy.drop_lo_in_hi:          # AMC: LO dropped outside LO-mode
+            continue
+        if hi_active:                     # LO only when no HI-task is active
+            continue
+        if mode == Mode.TRANS and not (t.data_in_accel
+                                       or t.tid in resident):
+            continue                      # only not-yet-saved LO may run
+        out.append(t)
+    return out
+
+
+def pick_next(tcbs: Dict[int, TCB], mode: Mode, resident: List[int],
+              policy: Policy) -> Optional[TCB]:
+    """Kernel.Scheduler.Find_next_task with MESC mode rules."""
+    elig = eligible_set(tcbs, mode, resident, policy)
+    if not elig:
+        return None
+    return min(elig, key=lambda t: t.params.priority)
+
+
+def update_mode(mode: Mode, tcbs: Dict[int, TCB], resident_lo: List[int],
+                any_active: bool) -> Mode:
+    """Transition/HI/LO mode progression (SS IV 'Mode switch')."""
+    if mode == Mode.TRANS and len(resident_lo) <= 1:
+        return Mode.HI
+    if mode != Mode.LO and not any_active:
+        return Mode.LO            # system idle -> revert
+    return mode

@@ -1,0 +1,187 @@
+"""MESC-scheduled model serving: the paper's mechanism driving real JAX
+model execution.
+
+Mapping (the TPU adaptation of SS IV/V, see DESIGN.md):
+  * accelerator instruction  = one bounded-latency jitted dispatch
+                               (one decode step / one prefill chunk)
+  * scratchpad banks         = a bounded pool of device-resident KV-cache
+                               slots (HBM arena); the bank allocator decides
+                               which requests stay resident
+  * context save / restore   = moving a request's cache pytree to/from host
+                               DRAM (step_wise_mvout/mvin analogue)
+  * config-copy buffer       = the request's generation config + position
+  * task monitor             = wall-clock LO-budget timers -> mode switch
+
+Scheduling follows scheduler.Policy + mode rules: HI requests preempt LO
+requests at instruction (= decode-step) boundaries; LO requests are never
+dropped (imprecise-MCS stance), they run when no HI request is active.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.scheduler import Mode, Policy
+from repro.core.task import Crit
+from repro.models import lm
+from repro.models.common import RuntimeConfig, CPU_RC
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # (S,) int32
+    max_new_tokens: int
+    priority: int
+    crit: Crit
+    lo_budget_s: float = 1e9        # LO-WCET analogue (wall clock)
+    # runtime state
+    generated: List[int] = dataclasses.field(default_factory=list)
+    cache: Optional[dict] = None    # device (resident) or host (saved)
+    resident: bool = False
+    done: bool = False
+    started_at: Optional[float] = None
+    exec_s: float = 0.0
+    first_token_at: Optional[float] = None
+    submitted_at: float = 0.0
+    finished_at: Optional[float] = None
+    preemptions: int = 0
+    saves: int = 0
+
+
+class MESCServer:
+    """Single-model mixed-criticality serving loop (batch size 1 per
+    request; the accelerator is the shared resource)."""
+
+    def __init__(self, cfg: ArchConfig, params, *, policy: Policy = None,
+                 rc: RuntimeConfig = CPU_RC, max_len: int = 64,
+                 resident_slots: int = 2):
+        self.cfg = cfg
+        self.params = params
+        self.rc = rc
+        self.policy = policy or Policy.mesc()
+        self.max_len = max_len
+        self.resident_slots = resident_slots   # "banks"
+        self.mode = Mode.LO
+        self.requests: Dict[int, Request] = {}
+        self.current: Optional[int] = None
+        self._decode = jax.jit(
+            lambda p, t, c: lm.decode_step(cfg, p, t, c, rc))
+        self._prefill = jax.jit(
+            lambda p, b: lm.prefill(cfg, p, b, rc, max_len=max_len))
+
+    # -- bank pool ----------------------------------------------------------
+    def _resident(self) -> List[Request]:
+        return [r for r in self.requests.values()
+                if r.resident and not r.done]
+
+    def _make_room(self, incoming: Request):
+        """Evict (context-save) lowest-priority resident request if the
+        bank pool is full — zero work when a slot is free (Obs. 1)."""
+        res = [r for r in self._resident() if r.rid != incoming.rid]
+        while len(res) >= self.resident_slots:
+            victim = max(res, key=lambda r: r.priority)
+            victim.cache = jax.device_get(victim.cache)   # step_wise_mvout
+            victim.resident = False
+            victim.saves += 1
+            res.remove(victim)
+
+    def _restore(self, r: Request):
+        if r.cache is None:
+            _, r.cache = self._prefill(
+                self.params, {"tokens": jnp.asarray(r.prompt[None])})
+        elif not r.resident:
+            r.cache = jax.device_put(r.cache)             # step_wise_mvin
+        r.resident = True
+
+    # -- scheduling ---------------------------------------------------------
+    def submit(self, r: Request):
+        r.submitted_at = time.monotonic()
+        self.requests[r.rid] = r
+
+    def _eligible(self) -> List[Request]:
+        live = [r for r in self.requests.values() if not r.done]
+        his = [r for r in live if r.crit == Crit.HI]
+        out = []
+        for r in live:
+            if r.crit == Crit.HI or self.mode == Mode.LO:
+                out.append(r)
+            elif self.policy.drop_lo_in_hi:
+                continue
+            elif his:
+                continue                   # LO only when no HI active
+            else:
+                out.append(r)
+        return out
+
+    def _pick(self) -> Optional[Request]:
+        el = self._eligible()
+        if not el:
+            live = [r for r in self.requests.values() if not r.done]
+            return min(live, key=lambda r: r.priority) if live else None
+        return min(el, key=lambda r: r.priority)
+
+    def _mode_tick(self):
+        live = [r for r in self.requests.values() if not r.done]
+        if not live:
+            self.mode = Mode.LO            # idle -> revert
+            return
+        for r in live:                     # monitor: LO-budget timers
+            if (r.crit == Crit.HI and r.exec_s > r.lo_budget_s
+                    and self.mode == Mode.LO):
+                self.mode = Mode.HI        # (transition is instantaneous
+                                           #  here: saves are synchronous)
+
+    # -- the serve loop -----------------------------------------------------
+    def step(self) -> Optional[int]:
+        """One scheduler invocation + one instruction (decode step).
+        Returns the rid that ran, or None if idle."""
+        self._mode_tick()
+        r = self._pick()
+        # non-preemptive baseline: a started request owns the accelerator
+        if (self.policy.preemption == "none" and self.current is not None):
+            cur = self.requests.get(self.current)
+            if cur is not None and not cur.done:
+                r = cur
+        if r is None:
+            return None
+        if r.rid != self.current and self.current is not None:
+            prev = self.requests.get(self.current)
+            if prev is not None and not prev.done:
+                prev.preemptions += 1
+        self.current = r.rid
+        if not r.resident:
+            self._make_room(r)
+            self._restore(r)
+        if r.started_at is None:
+            r.started_at = time.monotonic()
+        t0 = time.monotonic()
+        last = (r.generated[-1] if r.generated else int(r.prompt[-1]))
+        logits, r.cache = self._decode(self.params,
+                                       jnp.asarray([last], jnp.int32),
+                                       r.cache)
+        tok = int(jnp.argmax(logits[0]))
+        r.generated.append(tok)
+        r.exec_s += time.monotonic() - t0
+        if r.first_token_at is None:
+            r.first_token_at = time.monotonic()
+        if len(r.generated) >= r.max_new_tokens \
+                or int(r.cache["pos"]) >= self.max_len - 1:
+            r.done = True
+            r.finished_at = time.monotonic()
+            r.resident = False
+            r.cache = None                 # flush banks
+            self.current = None
+        return r.rid
+
+    def run(self, max_steps: int = 10_000) -> Dict[int, Request]:
+        for _ in range(max_steps):
+            if self.step() is None:
+                break
+        return self.requests

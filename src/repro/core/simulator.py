@@ -1,0 +1,316 @@
+"""Cycle-level discrete-event simulation of MESC (and baselines).
+
+Implements the paper's runtime semantics on a virtual 100 MHz clock:
+
+  * the task scheduler runs every T_sr cycles (releases observed at ticks —
+    the +T_sr term of Eq. 1);
+  * job completion and LO-WCET overruns (the monitor's per-task timers)
+    interrupt immediately;
+  * a preemption drains the in-flight instruction (instruction policy), or
+    runs to the operator boundary (limited preemption), or cannot happen
+    at all (non-preemptive baseline);
+  * context save/restore cycles come from the GemminiRT executor model —
+    including the zero-scratchpad-copy fast path when the bank allocator
+    finds room (Obs. 1);
+  * mode transitions follow scheduler.update_mode; AMC drops LO jobs.
+
+Metrics recorded per run: pi/ci blocking intervals, save/restore cycle
+breakdowns, deadline misses per criticality, LO jobs released & completed
+in HI-mode (survivability), mode residency.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.executor import GemminiRT
+from repro.core.program import Program
+from repro.core.scheduler import Mode, Policy, pick_next
+from repro.core.task import Crit, Status, TCB, TaskParams
+
+
+@dataclasses.dataclass
+class RunMetrics:
+    pi_blocking: List[float] = dataclasses.field(default_factory=list)
+    ci_blocking: List[float] = dataclasses.field(default_factory=list)
+    save_cycles: List[float] = dataclasses.field(default_factory=list)
+    restore_cycles: List[float] = dataclasses.field(default_factory=list)
+    jobs: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: {"LO": 0, "HI": 0})
+    done: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: {"LO": 0, "HI": 0})
+    misses: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: {"LO": 0, "HI": 0})
+    misses_by_mode: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: {"LO": 0, "transition": 0, "HI": 0})
+    lo_released_in_hi: int = 0
+    lo_done_in_hi: int = 0
+    mode_cycles: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {"LO": 0.0, "transition": 0.0, "HI": 0.0})
+    cs_count: int = 0
+    exec_cycles: float = 0.0
+    overhead_cycles: float = 0.0
+
+    def success(self, scope: str = "all") -> bool:
+        if scope == "HI":
+            return self.misses["HI"] == 0
+        return self.misses["HI"] == 0 and self.misses["LO"] == 0
+
+    def survivability(self) -> float:
+        if self.lo_released_in_hi == 0:
+            return 1.0
+        return self.lo_done_in_hi / self.lo_released_in_hi
+
+
+class MCSSimulator:
+    def __init__(self, tasks: List[TaskParams], programs: Dict[str, Program],
+                 policy: Policy, *, duration: float = 2e7, seed: int = 0,
+                 overrun_prob: float = 0.3, cf: float = 2.0):
+        self.params = {t.tid: t for t in tasks}
+        self.programs = programs
+        self.policy = policy
+        self.duration = duration
+        self.rng = np.random.default_rng(seed)
+        self.overrun_prob = overrun_prob
+        self.cf = cf
+        self.accel = GemminiRT(use_remapper=policy.use_banks)
+        self.tcbs: Dict[int, TCB] = {t.tid: TCB(params=t) for t in tasks}
+        self.metrics = RunMetrics()
+        self.mode = Mode.LO
+        self.now = 0.0
+        self.running: Optional[int] = None
+        self.accel_free_at = 0.0     # context switch in progress until here
+        self.demand: Dict[int, float] = {}
+        self._events: List = []      # (time, seq, kind, tid)
+        self._seq = 0
+        self._last_mode_stamp = 0.0
+
+    # ------------------------------------------------------------------
+    def _push(self, t: float, kind: str, tid: int = -1):
+        self._seq += 1
+        heapq.heappush(self._events, (t, self._seq, kind, tid))
+
+    def _program(self, tid: int) -> Program:
+        return self.programs[self.params[tid].workload]
+
+    def _sample_demand(self, p: TaskParams) -> float:
+        if p.crit == Crit.HI and self.rng.random() < self.overrun_prob:
+            return p.c_lo * self.rng.uniform(1.0, self.cf)
+        return p.c_lo * self.rng.uniform(0.7, 1.0)
+
+    def _next_tick(self, t: float) -> float:
+        k = int(t // self.policy.t_sr) + 1
+        return k * self.policy.t_sr
+
+    # ------------------------------------------------------------------
+    def _advance_running(self):
+        """Account progress of the running task up to self.now."""
+        if self.running is None:
+            return
+        tcb = self.tcbs[self.running]
+        elapsed = self.now - self._run_started
+        if elapsed <= 0:
+            return
+        tcb.exec_cycles += elapsed
+        self.metrics.exec_cycles += elapsed
+        self.accel.note_execution(tcb.tid, elapsed, self._program(tcb.tid))
+        self._run_started = self.now
+
+    def _set_mode(self, mode: Mode):
+        if mode is not self.mode:
+            self.metrics.mode_cycles[self.mode.value] += \
+                self.now - self._last_mode_stamp
+            self._last_mode_stamp = self.now
+            self.mode = mode
+
+    def _mode_tick(self):
+        """Mode progression per SS IV."""
+        resident_lo = [t for t in self.accel.remapper.resident_tasks()
+                       if self.params.get(t) is not None
+                       and self.params[t].crit == Crit.LO]
+        any_active = any(t.status in (Status.READY, Status.RUNNING,
+                                      Status.INTERRUPTED)
+                         for t in self.tcbs.values())
+        if self.mode == Mode.TRANS and len(resident_lo) <= 1:
+            self._set_mode(Mode.HI)
+        elif self.mode != Mode.LO and not any_active:
+            self._set_mode(Mode.LO)
+
+    # ------------------------------------------------------------------
+    def _finish_job(self, tcb: TCB):
+        tcb.status = Status.PENDING
+        crit = tcb.params.crit.value
+        self.metrics.done[crit] += 1
+        if tcb.job_release >= 0 and self.now > tcb.job_deadline:
+            self.metrics.misses[crit] += 1
+            self.metrics.misses_by_mode[self.mode.value] += 1
+        if getattr(tcb, "released_in_hi", False) \
+                and self.now <= tcb.job_deadline:
+            self.metrics.lo_done_in_hi += 1
+        self.metrics.overhead_cycles += self.accel.evict(tcb.tid)
+        tcb.data_in_accel = False
+        self.demand.pop(tcb.tid, None)
+
+    def _record_unblock(self, tcb: TCB, at: Optional[float] = None):
+        if tcb.blocked_since is not None:
+            dt = (at if at is not None else self.now) - tcb.blocked_since
+            # criticality inversion: a HI-task was kept waiting by a LO-task
+            # while the system was (or entered) degraded mode
+            cause = tcb.blocking_cause
+            if (cause == "ci?" and self.mode != Mode.LO):
+                cause = "ci"
+            if dt > 0:
+                (self.metrics.ci_blocking if cause == "ci"
+                 else self.metrics.pi_blocking).append(dt)
+            tcb.blocked_since = None
+            tcb.blocking_cause = None
+
+    def _mark_blocked(self, tcb: TCB):
+        if tcb.blocked_since is None:
+            tcb.blocked_since = self.now
+            run = self.tcbs.get(self.running) if self.running is not None \
+                else None
+            if (tcb.params.crit == Crit.HI and run is not None
+                    and run.params.crit == Crit.LO):
+                tcb.blocking_cause = "ci" if self.mode != Mode.LO else "ci?"
+            else:
+                tcb.blocking_cause = "pi"
+
+    # ------------------------------------------------------------------
+    def _dispatch(self, nxt: TCB):
+        """Context switch to ``nxt`` (Alg. 1)."""
+        cur = self.tcbs.get(self.running) if self.running is not None else None
+        switch_cost = 0.0
+        if cur is not None and cur.tid != nxt.tid:
+            prog = self._program(cur.tid)
+            if self.policy.preemption == "instruction":
+                boundary = prog.next_instruction_boundary(cur.exec_cycles)
+            else:  # operator
+                boundary = prog.next_operator_boundary(cur.exec_cycles)
+            drain = max(0.0, min(boundary, self.demand[cur.tid])
+                        - cur.exec_cycles)
+            cur.exec_cycles += drain
+            next_eta = nxt.params.eta if self.policy.use_banks else None
+            br = self.accel.context_save(cur, int(drain), next_eta=next_eta)
+            # HI-mode rule: <=1 resident LO-task -> evict on LO->LO preempt
+            if (self.mode == Mode.HI and cur.params.crit == Crit.LO
+                    and nxt.params.crit == Crit.LO):
+                self.accel.remapper.release(cur.tid)
+                cur.data_in_accel = False
+            cur.status = Status.INTERRUPTED
+            switch_cost += br.total
+            self.metrics.save_cycles.append(br.total)
+            self.metrics.cs_count += 1
+        if nxt.pc > 0 or nxt.status == Status.INTERRUPTED:
+            br = self.accel.context_restore(nxt)
+            switch_cost += br.total
+            self.metrics.restore_cycles.append(br.total)
+        self.metrics.overhead_cycles += switch_cost
+        self.running = nxt.tid
+        nxt.status = Status.RUNNING
+        nxt.pc = 1
+        self._record_unblock(nxt, at=self.now + switch_cost)
+        self._run_started = self.now + switch_cost
+        self.accel_free_at = self.now + switch_cost
+        # future events for the new running task
+        rem = self.demand[nxt.tid] - nxt.exec_cycles
+        self._push(self._run_started + rem, "finish", nxt.tid)
+        p = nxt.params
+        if (p.crit == Crit.HI and not nxt.budget_overrun
+                and nxt.exec_cycles < p.c_lo):
+            self._push(self._run_started + (p.c_lo - nxt.exec_cycles),
+                       "overrun", nxt.tid)
+
+    def _schedule(self):
+        """One scheduler invocation (a T_sr tick or an interrupt)."""
+        if self.now < self.accel_free_at:      # CS in progress
+            self._push(self._next_tick(self.accel_free_at), "tick")
+            return
+        self._advance_running()
+        self._mode_tick()
+        resident = self.accel.remapper.resident_tasks()
+        nxt = pick_next(self.tcbs, self.mode, resident, self.policy)
+        cur = self.tcbs.get(self.running) if self.running is not None else None
+        if cur is not None and cur.status != Status.RUNNING:
+            cur = None
+            self.running = None
+        if nxt is None:
+            return
+        if cur is not None and nxt.tid == cur.tid:
+            return
+        if cur is not None and self.policy.preemption == "none":
+            self._mark_blocked(nxt)            # must wait for completion
+            return
+        if cur is not None:
+            self._mark_blocked(nxt)            # waits for drain + CS
+        self._dispatch(nxt)
+
+    # ------------------------------------------------------------------
+    def run(self) -> RunMetrics:
+        for tid, p in self.params.items():
+            phase = self.rng.uniform(0, p.period)
+            self._push(phase, "release", tid)
+        self._run_started = 0.0
+        while self._events:
+            t, _, kind, tid = heapq.heappop(self._events)
+            if t > self.duration:
+                break
+            self.now = t
+            if kind == "release":
+                tcb = self.tcbs[tid]
+                p = tcb.params
+                self._push(t + p.period, "release", tid)
+                if tcb.status != Status.PENDING:
+                    # previous job still live: count a miss once, skip release
+                    if tcb.job_deadline != float("inf"):
+                        self.metrics.misses[p.crit.value] += 1
+                        self.metrics.misses_by_mode[self.mode.value] += 1
+                        tcb.job_deadline = float("inf")
+                    continue
+                if self.policy.drop_lo_in_hi and p.crit == Crit.LO \
+                        and self.mode != Mode.LO:
+                    continue                    # AMC: LO not released
+                tcb.release(t)
+                self.demand[tid] = self._sample_demand(p)
+                self.metrics.jobs[p.crit.value] += 1
+                tcb.released_in_hi = (p.crit == Crit.LO
+                                      and self.mode != Mode.LO)
+                if tcb.released_in_hi:
+                    self.metrics.lo_released_in_hi += 1
+                self._push(self._next_tick(t), "tick")
+            elif kind == "finish":
+                tcb = self.tcbs[tid]
+                if self.running == tid and tcb.status == Status.RUNNING:
+                    self._advance_running()
+                    if tcb.exec_cycles >= self.demand.get(
+                            tid, float("inf")) - 1e-6:
+                        self._finish_job(tcb)
+                        self.running = None
+                        self._schedule()
+            elif kind == "overrun":
+                tcb = self.tcbs[tid]
+                if self.running == tid and tcb.status == Status.RUNNING:
+                    self._advance_running()
+                    if tcb.exec_cycles >= tcb.params.c_lo - 1e-6 \
+                            and not tcb.budget_overrun:
+                        tcb.budget_overrun = True
+                        if self.mode == Mode.LO:
+                            self._set_mode(Mode.TRANS)   # Mode_switch
+                        self._schedule()
+            elif kind == "tick":
+                self._schedule()
+        # tail accounting
+        self.metrics.mode_cycles[self.mode.value] += \
+            self.duration - self._last_mode_stamp
+        for tcb in self.tcbs.values():
+            if tcb.status != Status.PENDING \
+                    and self.duration > tcb.job_deadline:
+                self.metrics.misses[tcb.params.crit.value] += 1
+        return self.metrics
+
+
+def simulate(tasks, programs, policy, **kw) -> RunMetrics:
+    return MCSSimulator(tasks, programs, policy, **kw).run()

@@ -1,0 +1,67 @@
+"""Task-set generation (paper SS VIII 'Task set setup').
+
+* utilisations via UUnifast (unbiased);
+* C_LO drawn from the workload library's measured total cycles;
+* C_HI = CF * C_LO (default CF = 2.0);
+* T_i = C_LO / U_i, implicit deadlines D_i = T_i;
+* fixed priorities in ascending order of T_i (rate monotonic);
+* HI-task share gamma (default 0.5); beta tasks per set (default 10).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.program import Program, workload_library
+from repro.core.task import Crit, TaskParams
+from repro.core.isa import BANK_BYTES, SCRATCHPAD_BANKS
+
+
+def uunifast(n: int, total_u: float, rng: np.random.Generator) -> np.ndarray:
+    u = np.empty(n)
+    s = total_u
+    for i in range(n - 1):
+        nxt = s * rng.random() ** (1.0 / (n - 1 - i))
+        u[i] = s - nxt
+        s = nxt
+    u[-1] = s
+    return u
+
+
+def eta_for(program: Program) -> int:
+    """Minimal banks preserving full speed (SS VII.C, Fig. 6 analogue):
+    working set rounded up to banks, capped at the scratchpad."""
+    eta = max(1, -(-program.working_set_bytes // BANK_BYTES))
+    return min(eta, SCRATCHPAD_BANKS)
+
+
+def generate_taskset(total_u: float, *, n_tasks: int = 10,
+                     gamma: float = 0.5, cf: float = 2.0,
+                     seed: int = 0,
+                     programs: Optional[Dict[str, Program]] = None,
+                     workload_names: Optional[Sequence[str]] = None,
+                     ) -> List[TaskParams]:
+    rng = np.random.default_rng(seed)
+    programs = programs or workload_library()
+    names = list(workload_names or
+                 [n for n in programs
+                  if programs[n].total_cycles < 2e7])  # keep periods tractable
+    u = uunifast(n_tasks, total_u, rng)
+    chosen = rng.choice(names, size=n_tasks)
+    n_hi = int(round(gamma * n_tasks))
+    crits = np.array([Crit.HI] * n_hi + [Crit.LO] * (n_tasks - n_hi))
+    rng.shuffle(crits)
+    tasks = []
+    for i in range(n_tasks):
+        prog = programs[chosen[i]]
+        c_lo = float(prog.total_cycles)
+        period = c_lo / max(u[i], 1e-6)
+        tasks.append(TaskParams(
+            tid=i, priority=0, period=period, deadline=period,
+            c_lo=c_lo, c_hi=cf * c_lo, crit=crits[i],
+            eta=eta_for(prog), workload=chosen[i]))
+    # rate-monotonic: shorter period -> higher priority (smaller number)
+    for prio, t in enumerate(sorted(tasks, key=lambda t: t.period)):
+        t.priority = prio
+    return tasks

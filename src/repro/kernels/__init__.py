@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the compute hot spots.
+
+systolic_gemm     — Gemmini^RT analogue: VMEM-tiled GEMM + checkpointable
+                    accumulator (instruction-level preemption inside a GEMM)
+flash_attention   — causal flash with true block skipping
+decode_attention  — flash-decoding for long KV caches
+rglru_scan        — RG-LRU linear recurrence
+
+ops.py = jit'd wrappers (interpret=True on CPU); ref.py = jnp oracles.
+EXAMPLE.md documents the per-kernel structure convention.
+"""
+from repro.kernels import ops, ref  # noqa: F401

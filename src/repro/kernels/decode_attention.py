@@ -1,0 +1,91 @@
+"""Flash-decoding Pallas kernel: one new query token vs a long KV cache.
+
+The decode hot spot is memory-bound (stream the whole cache once); the
+kernel blocks over S with an online softmax in VMEM scratch and masks
+positions > pos.  Fusing the mask+softmax+weighted-sum means the cache is
+read exactly once from HBM and nothing S-sized is written back — the
+pure-jnp path materializes (B,H,S) logits instead.
+
+Layout: q (B,Hq,dh); cache (B,Hkv,S,dh); pos () int32 (scalar-prefetched).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, bs: int, ns: int, scale: float,
+                   g: int):
+    si = pl.program_id(1)
+    pos = pos_ref[0]
+
+    @pl.when(si == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(si * bs <= pos)                   # skip fully-future blocks
+    def _compute():
+        q = q_ref[0]                           # (G, dh) query heads group
+        k = k_ref[0]                           # (bs, dh)
+        v = v_ref[0]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kpos = si * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos <= pos, s, NEG_INF)
+        m_prev = m_ref[:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new) * (s > NEG_INF * 0.5)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+
+    @pl.when(si == ns - 1)
+    def _out():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[:, :1], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention_tpu(q, k_cache, v_cache, pos, *, block_s: int = 1024,
+                         interpret: bool = False):
+    """q (B,Hq,dh), k/v_cache (B,Hkv,S,dh), pos () -> (B,Hq,dh)."""
+    B, Hq, dh = q.shape
+    _, Hkv, S, _ = k_cache.shape
+    G = Hq // Hkv
+    bs = min(block_s, S)
+    assert S % bs == 0
+    ns = S // bs
+    qf = q.reshape(B * Hkv, G, dh)
+    kf = k_cache.reshape(B * Hkv, S, dh)
+    vf = v_cache.reshape(B * Hkv, S, dh)
+    pos_arr = jnp.asarray(pos, jnp.int32).reshape(1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B * Hkv, ns),
+        in_specs=[pl.BlockSpec((1, G, dh), lambda bh, si, pos: (bh, 0, 0)),
+                  pl.BlockSpec((1, bs, dh), lambda bh, si, pos: (bh, si, 0)),
+                  pl.BlockSpec((1, bs, dh), lambda bh, si, pos: (bh, si, 0))],
+        out_specs=pl.BlockSpec((1, G, dh), lambda bh, si, pos: (bh, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((G, 128), jnp.float32),
+                        pltpu.VMEM((G, 128), jnp.float32),
+                        pltpu.VMEM((G, dh), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, bs=bs, ns=ns, scale=dh ** -0.5,
+                          g=G),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * Hkv, G, dh), q.dtype),
+        interpret=interpret,
+    )(pos_arr, qf, kf, vf)
+    return out.reshape(B, Hq, dh)

@@ -1,0 +1,95 @@
+"""Causal flash attention as a Pallas TPU kernel.
+
+Unlike the portable jnp implementation (which must *mask* future KV blocks,
+spending the full S^2 FLOPs), the kernel **skips** fully-masked blocks via
+``pl.when`` on the grid coordinates — halving compute for causal prefill —
+and keeps (m, l, acc) in VMEM scratch across the (sequential, innermost) KV
+grid dimension, so nothing score-sized ever reaches HBM.
+
+Layout: q (B, Hq, S, dh), k/v (B, Hkv, S, dh); GQA via index-map folding
+(query head h reads kv head h // G).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                  *, bq: int, bkv: int, nkv: int, scale: float,
+                  causal: bool):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    live = (ki * bkv < (qi + 1) * bq) if causal else True
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0]                       # (bq, dh)
+        k = k_ref[0]                       # (bkv, dh)
+        v = v_ref[0]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+            kpos = ki * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_ref[:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new) * (s > NEG_INF * 0.5)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+
+    @pl.when(ki == nkv - 1)
+    def _out():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[:, :1], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_tpu(q, k, v, *, causal: bool = True, block_q: int = 512,
+                        block_kv: int = 512, interpret: bool = False):
+    """q (B,Hq,S,dh), k/v (B,Hkv,S,dh) -> (B,Hq,S,dh)."""
+    B, Hq, S, dh = q.shape
+    _, Hkv, Skv, _ = k.shape
+    G = Hq // Hkv
+    bq, bkv = min(block_q, S), min(block_kv, Skv)
+    assert S % bq == 0 and Skv % bkv == 0
+    nq, nkv = S // bq, Skv // bkv
+    qf = q.reshape(B * Hq, S, dh)
+    kf = k.reshape(B * Hkv, Skv, dh)
+    vf = v.reshape(B * Hkv, Skv, dh)
+
+    def kv_index(bh, qi, ki):
+        b, hq = bh // Hq, bh % Hq
+        return (b * Hkv + hq // G, ki, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, bq=bq, bkv=bkv, nkv=nkv,
+                          scale=dh ** -0.5, causal=causal),
+        grid=(B * Hq, nq, nkv),
+        in_specs=[pl.BlockSpec((1, bq, dh), lambda bh, qi, ki: (bh, qi, 0)),
+                  pl.BlockSpec((1, bkv, dh), kv_index),
+                  pl.BlockSpec((1, bkv, dh), kv_index)],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, S, dh), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, 128), jnp.float32),
+                        pltpu.VMEM((bq, 128), jnp.float32),
+                        pltpu.VMEM((bq, dh), jnp.float32)],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, Hq, S, dh)

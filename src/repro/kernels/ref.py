@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gemm_ref(a, b, out_dtype=None):
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(
+        out_dtype or a.dtype)
+
+
+def gemm_partial_ref(a, b, acc, k_begin: int, k_end: int, bk: int):
+    a_sl = a[:, k_begin * bk: k_end * bk].astype(jnp.float32)
+    b_sl = b[k_begin * bk: k_end * bk].astype(jnp.float32)
+    return acc + a_sl @ b_sl
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    """q (B,Hq,S,dh), k/v (B,Hkv,S,dh)."""
+    B, Hq, S, dh = q.shape
+    Hkv = k.shape[1]
+    G = Hq // Hkv
+    k = jnp.repeat(k, G, axis=1)
+    v = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * (dh ** -0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v,
+                      preferred_element_type=jnp.float32).astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, pos):
+    """q (B,Hq,dh), k/v (B,Hkv,S,dh), pos ()."""
+    B, Hq, dh = q.shape
+    Hkv, S = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    k = jnp.repeat(k_cache, G, axis=1)
+    v = jnp.repeat(v_cache, G, axis=1)
+    s = jnp.einsum("bhd,bhsd->bhs", q, k,
+                   preferred_element_type=jnp.float32) * (dh ** -0.5)
+    s = jnp.where(jnp.arange(S)[None, None] <= pos, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhs,bhsd->bhd", p.astype(v.dtype), v,
+                      preferred_element_type=jnp.float32).astype(q.dtype)
+
+
+def rglru_scan_ref(a, b, h0):
+    """Sequential oracle for h_t = a_t h_{t-1} + b_t."""
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+    _, ys = jax.lax.scan(step, h0, (jnp.moveaxis(a, 1, 0),
+                                    jnp.moveaxis(b, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1)

@@ -1,0 +1,312 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# The two lines above MUST run before any other import (jax locks the device
+# count on first backend initialisation).
+
+# Multi-pod dry-run: lower + compile every (architecture x shape x mesh)
+# cell, print memory/cost analysis, and dump roofline raw terms to JSON.
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b \
+#       --shape train_4k [--multi-pod]
+#   PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+#
+# Success criterion (deliverable e): .lower().compile() succeeds and the
+# per-device memory fits a v5e (16 GB) for every supported cell.
+
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES_BY_NAME, get_config, supports_shape
+from repro.launch.mesh import make_production_mesh
+from repro.launch import specs as S
+from repro.models.common import RuntimeConfig
+from repro.optim import OptConfig, init_opt_state
+from repro.runtime import sharding as shlib
+from repro.runtime.hlo_analysis import analyze_hlo
+from repro.runtime.trainer import (make_decode_step, make_prefill_step,
+                                   make_train_step)
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+# --------------------------------------------------------------------------
+# Per-cell runtime policy (baseline; §Perf hillclimbs override these)
+# --------------------------------------------------------------------------
+
+BIG_TRAIN = {"qwen1.5-110b": 8, "llava-next-34b": 6, "llama4-maverick-400b-a17b": 6}
+# grad-accumulation microbatches for train cells (activation-linear memory)
+MICROBATCH = {"qwen1.5-110b": 4, "llava-next-34b": 4,
+              "llama4-maverick-400b-a17b": 4, "phi4-mini-3.8b": 2,
+              "recurrentgemma-2b": 2, "deepseek-v2-lite-16b": 2}
+
+
+def cell_microbatches(arch_name: str, shape_kind: str) -> int:
+    return MICROBATCH.get(arch_name, 1) if shape_kind == "train" else 1
+
+
+INT8_MOMENTS = {"llama4-maverick-400b-a17b"}
+BF16_ACCUM = {"llama4-maverick-400b-a17b"}
+
+
+def cell_opt(arch_name: str) -> OptConfig:
+    return OptConfig(moments_int8=arch_name in INT8_MOMENTS)
+
+
+def cell_rc(arch_name: str, shape_kind: str) -> RuntimeConfig:
+    if shape_kind == "train":
+        return RuntimeConfig(
+            compute_dtype=jnp.bfloat16,
+            param_dtype=jnp.bfloat16 if arch_name == "llama4-maverick-400b-a17b"
+            else jnp.float32,
+            remat_policy="full",
+            remat_groups=BIG_TRAIN.get(arch_name, 0),
+            sequence_parallel=True,
+            flash_block_q=512, flash_block_kv=1024)
+    return RuntimeConfig(compute_dtype=jnp.bfloat16, param_dtype=jnp.bfloat16,
+                         sequence_parallel=(shape_kind == "prefill"),
+                         pad_attn_heads=16,   # TP-align odd head counts
+                         flash_block_q=512, flash_block_kv=1024)
+
+
+# --------------------------------------------------------------------------
+# Cell lowering
+# --------------------------------------------------------------------------
+
+def lower_cell(arch_name: str, shape_name: str, mesh, rules,
+               rc_override=None):
+    cfg = get_config(arch_name)
+    shape = SHAPES_BY_NAME[shape_name]
+    rc = rc_override or cell_rc(arch_name, shape.kind)
+    opt_cfg = cell_opt(arch_name)
+
+    with shlib.axis_rules(rules):
+        if shape.kind == "train":
+            params_a = S.params_abstract(cfg, rc)
+            opt_a = jax.eval_shape(lambda: init_opt_state(params_a, opt_cfg))
+            batch_a = S.train_batch_specs(cfg, shape, rc)
+            p_spec = shlib.param_specs(params_a, rules)
+            o_spec = {}
+            for key, sub in opt_a.items():
+                if key in ("m", "v"):
+                    o_spec[key] = shlib.param_specs(params_a, rules)
+                else:  # scales / step: replicated scalars
+                    o_spec[key] = shlib.replicated(sub, rules)
+            b_spec = shlib.batch_specs(batch_a, rules)
+            step = make_train_step(
+                cfg, rc, opt_cfg,
+                microbatches=cell_microbatches(arch_name, "train"),
+                accum_dtype=jnp.bfloat16 if arch_name in BF16_ACCUM
+                else jnp.float32)
+            fn = jax.jit(step,
+                         in_shardings=(p_spec, o_spec, b_spec),
+                         out_shardings=(p_spec, o_spec, None),
+                         donate_argnums=(0, 1))
+            lowered = fn.lower(params_a, opt_a, batch_a)
+        elif shape.kind == "prefill":
+            params_a = S.params_abstract(cfg, rc)
+            batch_a = S.prefill_batch_specs(cfg, shape, rc)
+            p_spec = shlib.param_specs(params_a, rules)
+            b_spec = shlib.batch_specs(batch_a, rules)
+            step = make_prefill_step(cfg, rc)
+            cache_a = jax.eval_shape(lambda p, b: step(p, b)[1],
+                                     params_a, batch_a)
+            c_spec = shlib.cache_specs(cache_a, rules)
+            fn = jax.jit(step, in_shardings=(p_spec, b_spec),
+                         out_shardings=(None, c_spec))
+            lowered = fn.lower(params_a, batch_a)
+        else:  # decode
+            params_a = S.params_abstract(cfg, rc)
+            tok_a = S.decode_token_specs(cfg, shape)
+            cache_a = S.cache_specs_abstract(cfg, shape, rc)
+            p_spec = shlib.param_specs(params_a, rules)
+            c_spec = shlib.cache_specs(cache_a, rules)
+            t_spec = shlib.batch_specs(tok_a, rules)
+            step = make_decode_step(cfg, rc)
+            fn = jax.jit(step,
+                         in_shardings=(p_spec, t_spec, c_spec),
+                         out_shardings=(None, c_spec),
+                         donate_argnums=(2,))
+            lowered = fn.lower(params_a, tok_a, cache_a)
+    return lowered
+
+
+def analyze(lowered, mesh) -> dict:
+    n_dev = mesh.devices.size
+    t0 = time.time()
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+    res = {"compile_seconds": round(compile_s, 1), "n_devices": int(n_dev)}
+
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+            v = getattr(ma, k, None)
+            if v is not None:
+                res[k] = int(v)
+        res["per_device_hbm_bytes"] = (
+            res.get("argument_size_in_bytes", 0)
+            + res.get("output_size_in_bytes", 0)
+            + res.get("temp_size_in_bytes", 0)
+            - res.get("alias_size_in_bytes", 0))
+    except Exception as e:  # pragma: no cover
+        res["memory_analysis_error"] = str(e)
+
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        res["hlo_flops"] = float(ca.get("flops", 0.0))
+        res["hlo_bytes"] = float(ca.get("bytes accessed", 0.0))
+        res["hlo_transcendentals"] = float(ca.get("transcendentals", 0.0))
+    except Exception as e:  # pragma: no cover
+        res["cost_analysis_error"] = str(e)
+
+    try:
+        txt = compiled.as_text()
+        h = analyze_hlo(txt, n_dev)
+        res["hlo_text_flops_per_device"] = h["flops"]
+        res["hlo_text_bytes_per_device"] = h["hbm_bytes"]
+        res["hlo_text_bytes_no_copies"] = h["hbm_bytes_no_copies"]
+        res["collectives"] = h["collectives"]
+        res["collective_link_bytes"] = h["collective_link_bytes"]
+    except Exception as e:  # pragma: no cover
+        res["collective_parse_error"] = str(e)
+    return res
+
+
+def cost_probe(arch_name: str, shape_name: str) -> dict:
+    """Single-device, scan-unrolled lowering -> exact global HLO FLOPs.
+
+    Uses lowered.cost_analysis() (no compile); flash attention runs
+    single-block so no inner loops hide FLOPs.  Cross-check for the
+    compiled-text analysis (see DESIGN.md roofline methodology).
+    """
+    import dataclasses
+    cfg = get_config(arch_name)
+    shape = SHAPES_BY_NAME[shape_name]
+    base = cell_rc(arch_name, shape.kind)
+    rc = dataclasses.replace(base, cost_probe=True,
+                             flash_block_q=shape.seq_len,
+                             flash_block_kv=shape.seq_len,
+                             logical_axes=False)
+    opt_cfg = cell_opt(arch_name)
+    if shape.kind == "train":
+        params_a = S.params_abstract(cfg, rc)
+        opt_a = jax.eval_shape(lambda: init_opt_state(params_a, opt_cfg))
+        batch_a = S.train_batch_specs(cfg, shape, rc)
+        step = make_train_step(
+            cfg, rc, opt_cfg,
+            microbatches=cell_microbatches(arch_name, "train"),
+            accum_dtype=jnp.bfloat16 if arch_name in BF16_ACCUM
+            else jnp.float32)
+        lowered = jax.jit(step).lower(params_a, opt_a, batch_a)
+    elif shape.kind == "prefill":
+        params_a = S.params_abstract(cfg, rc)
+        batch_a = S.prefill_batch_specs(cfg, shape, rc)
+        lowered = jax.jit(make_prefill_step(cfg, rc)).lower(params_a, batch_a)
+    else:
+        params_a = S.params_abstract(cfg, rc)
+        tok_a = S.decode_token_specs(cfg, shape)
+        cache_a = S.cache_specs_abstract(cfg, shape, rc)
+        lowered = jax.jit(make_decode_step(cfg, rc)).lower(
+            params_a, tok_a, cache_a)
+    ca = lowered.cost_analysis()
+    return {"probe_global_flops": float(ca.get("flops", 0.0)),
+            "probe_global_bytes": float(ca.get("bytes accessed", 0.0))}
+
+
+SMALL_2D = {"tinyllama-1.1b", "olmo-1b", "xlstm-125m", "musicgen-large",
+            "phi4-mini-3.8b"}
+
+
+def cell_mode(arch_name: str, shape_name: str) -> str:
+    """2d (ZeRO-3 batch sharding) for small archs in training; sp+TP else."""
+    if shape_name == "train_4k" and arch_name in SMALL_2D:
+        return "2d"
+    return "sp"
+
+
+FSDP_OVER_POD = {"llama4-maverick-400b-a17b", "qwen1.5-110b"}
+
+
+def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
+             out_dir: Path = RESULTS_DIR) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = shlib.AxisRules(mesh, sequence_parallel=True,
+                            mode=cell_mode(arch_name, shape_name),
+                            fsdp_over_pod=(multi_pod and
+                                           arch_name in FSDP_OVER_POD))
+    tag = f"{arch_name}__{shape_name}__{'pod2' if multi_pod else 'pod1'}"
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out_path = out_dir / f"{tag}.json"
+    rec = {"arch": arch_name, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16", "status": "ok"}
+    t0 = time.time()
+    try:
+        lowered = lower_cell(arch_name, shape_name, mesh, rules)
+        rec["lower_seconds"] = round(time.time() - t0, 1)
+        rec.update(analyze(lowered, mesh))
+        try:
+            rec.update(cost_probe(arch_name, shape_name))
+        except Exception as e:  # probe is best-effort
+            rec["probe_error"] = f"{type(e).__name__}: {e}"
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    out_path.write_text(json.dumps(rec, indent=2))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    archs = sorted(ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = (["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+              if (args.all or not args.shape) else [args.shape])
+    for a in archs:
+        for s in shapes:
+            if supports_shape(ARCHS[a], SHAPES_BY_NAME[s]):
+                cells.append((a, s))
+            else:
+                print(f"SKIP {a} x {s} (needs sub-quadratic attention; "
+                      f"see DESIGN.md)")
+
+    for a, s in cells:
+        tag = f"{a}__{s}__{'pod2' if args.multi_pod else 'pod1'}"
+        if args.skip_existing and (RESULTS_DIR / f"{tag}.json").exists():
+            prev = json.loads((RESULTS_DIR / f"{tag}.json").read_text())
+            if prev.get("status") == "ok":
+                print(f"CACHED {tag}")
+                continue
+        print(f"=== {tag} ===", flush=True)
+        rec = run_cell(a, s, args.multi_pod)
+        if rec["status"] == "ok":
+            print(f"  ok: compile={rec.get('compile_seconds')}s "
+                  f"hbm/device={rec.get('per_device_hbm_bytes', 0)/2**30:.2f}GiB "
+                  f"flops={rec.get('hlo_flops', 0):.3e} "
+                  f"coll={rec.get('collective_link_bytes', 0)/2**30:.3f}GiB",
+                  flush=True)
+        else:
+            print(f"  ERROR: {rec['error']}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

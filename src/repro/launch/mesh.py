@@ -1,0 +1,24 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (jax locks the device count on first backend init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 (one v5e pod, 256 chips) or 2x16x16 (two pods, 512 chips).
+
+    Axis roles: 'pod' = pure DP across pods (slow links, gradient all-reduce
+    only), 'data' = DP + FSDP shard axis, 'model' = TP/EP/vocab/sequence.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 2):
+    """Small host-device mesh for tests (requires >= n_data*n_model devices)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

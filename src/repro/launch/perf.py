@@ -1,0 +1,184 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+# SSPerf hillclimbing harness: lower/compile named VARIANTS of the three
+# chosen cells and record the roofline terms for the
+# hypothesis -> change -> measure -> validate loop (EXPERIMENTS.md SSPerf).
+#
+#   PYTHONPATH=src python -m repro.launch.perf --cell qwen_train --variant mb2
+
+import argparse
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES_BY_NAME, get_config
+from repro.launch import specs as S
+from repro.launch.dryrun import analyze, cell_microbatches, cell_rc, cell_opt
+from repro.launch.mesh import make_production_mesh
+from repro.optim import OptConfig, init_opt_state
+from repro.runtime import sharding as shlib
+from repro.runtime.trainer import (make_decode_step, make_prefill_step,
+                                   make_train_step)
+
+OUT = Path(__file__).resolve().parents[3] / "results" / "perf"
+
+
+def lower_variant(arch, shape_name, *, rc=None, microbatches=None,
+                  mode="sp", opt_cfg=None, accum_dtype=jnp.float32):
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    rc = rc or cell_rc(arch, shape.kind)
+    opt_cfg = opt_cfg or cell_opt(arch)
+    mesh = make_production_mesh()
+    rules = shlib.AxisRules(mesh, sequence_parallel=True, mode=mode)
+    with shlib.axis_rules(rules):
+        if shape.kind == "train":
+            mb = microbatches if microbatches is not None \
+                else cell_microbatches(arch, "train")
+            params_a = S.params_abstract(cfg, rc)
+            opt_a = jax.eval_shape(lambda: init_opt_state(params_a, opt_cfg))
+            batch_a = S.train_batch_specs(cfg, shape, rc)
+            p_spec = shlib.param_specs(params_a, rules)
+            o_spec = {k: (shlib.param_specs(params_a, rules)
+                          if k in ("m", "v") else shlib.replicated(v, rules))
+                      for k, v in opt_a.items()}
+            b_spec = shlib.batch_specs(batch_a, rules)
+            fn = jax.jit(make_train_step(cfg, rc, opt_cfg, microbatches=mb,
+                                         accum_dtype=accum_dtype),
+                         in_shardings=(p_spec, o_spec, b_spec),
+                         out_shardings=(p_spec, o_spec, None),
+                         donate_argnums=(0, 1))
+            return fn.lower(params_a, opt_a, batch_a), mesh
+        if shape.kind == "prefill":
+            params_a = S.params_abstract(cfg, rc)
+            batch_a = S.prefill_batch_specs(cfg, shape, rc)
+            p_spec = shlib.param_specs(params_a, rules)
+            b_spec = shlib.batch_specs(batch_a, rules)
+            step = make_prefill_step(cfg, rc)
+            cache_a = jax.eval_shape(lambda p, b: step(p, b)[1],
+                                     params_a, batch_a)
+            c_spec = shlib.cache_specs(cache_a, rules)
+            fn = jax.jit(step, in_shardings=(p_spec, b_spec),
+                         out_shardings=(None, c_spec))
+            return fn.lower(params_a, batch_a), mesh
+        params_a = S.params_abstract(cfg, rc)
+        tok_a = S.decode_token_specs(cfg, shape)
+        cache_a = S.cache_specs_abstract(cfg, shape, rc)
+        p_spec = shlib.param_specs(params_a, rules)
+        c_spec = shlib.cache_specs(cache_a, rules)
+        t_spec = shlib.batch_specs(tok_a, rules)
+        fn = jax.jit(make_decode_step(cfg, rc),
+                     in_shardings=(p_spec, t_spec, c_spec),
+                     out_shardings=(None, c_spec), donate_argnums=(2,))
+        return fn.lower(params_a, tok_a, cache_a), mesh
+
+
+# ---------------------------------------------------------------------------
+# Variant registry (hypotheses documented in EXPERIMENTS.md SSPerf)
+# ---------------------------------------------------------------------------
+
+def _qwen_rc(**kw):
+    return dataclasses.replace(cell_rc("qwen1.5-110b", "train"), **kw)
+
+
+def _xlstm_rc(**kw):
+    return dataclasses.replace(cell_rc("xlstm-125m", "prefill"), **kw)
+
+
+def _xlstm_cfg_chunk(chunk):
+    # chunk is carried on the arch config; build an rc-compatible override
+    import repro.configs as C
+    cfg = C.ARCHS["xlstm-125m"]
+    return dataclasses.replace(cfg, xlstm=dataclasses.replace(
+        cfg.xlstm, chunk=chunk))
+
+
+VARIANTS = {
+    "qwen_train": {
+        "arch": "qwen1.5-110b", "shape": "train_4k",
+        "variants": {
+            "baseline": {},
+            "mb2": {"microbatches": 2},
+            "mb1": {"microbatches": 1},
+            "dots": {"rc": _qwen_rc(remat_policy="dots", remat_groups=0),
+                     "microbatches": 4},
+            "mb2_groups4": {"microbatches": 2,
+                            "rc": _qwen_rc(remat_groups=4)},
+            # round 2: dots needs less memory headroom via more microbatches
+            "dots_mb8": {"rc": _qwen_rc(remat_policy="dots", remat_groups=0),
+                         "microbatches": 8},
+            # round 2: ZeRO-3 (2d batch sharding) vs Megatron-SP — weight
+            # gathers (~220GB bf16/pass) vs activation AG/RS at 16 seq/shard
+            "2d_dots_mb1": {"mode": "2d", "microbatches": 1,
+                            "rc": _qwen_rc(remat_policy="dots",
+                                           remat_groups=0)},
+            "2d_full_mb2": {"mode": "2d", "microbatches": 2},
+            # round 3: 2d needs mb=1 (B=256 = dp x tp exactly); full remat
+            # trades one extra gather pass for activation memory
+            "2d_full_mb1": {"mode": "2d", "microbatches": 1,
+                            "rc": _qwen_rc(remat_groups=0)},
+            "2d_groups8_mb1": {"mode": "2d", "microbatches": 1},
+        },
+    },
+    "xlstm_prefill": {
+        "arch": "xlstm-125m", "shape": "prefill_32k",
+        "variants": {
+            "baseline": {},
+            "chunk128": {"cfg_override": 128},
+            "chunk512": {"cfg_override": 512},
+            "chunk1024": {"cfg_override": 1024},
+        },
+    },
+    "qwen_decode": {
+        "arch": "qwen1.5-110b", "shape": "decode_32k",
+        "variants": {
+            "baseline": {},
+            # DUS write touches one slot (ideal bytes) IF GSPMD partitions
+            # it on the sharded S dim; select touches the whole cache
+            "dus_update": {"rc": dataclasses.replace(
+                cell_rc("qwen1.5-110b", "decode"), dus_cache_update=True)},
+        },
+    },
+}
+
+
+def run(cell: str, variant: str):
+    spec = VARIANTS[cell]
+    kw = dict(spec["variants"][variant])
+    cfg_override = kw.pop("cfg_override", None)
+    if cfg_override is not None:
+        import repro.configs as C
+        C.ARCHS["xlstm-125m"] = _xlstm_cfg_chunk(cfg_override)
+    t0 = time.time()
+    lowered, mesh = lower_variant(spec["arch"], spec["shape"], **kw)
+    rec = {"cell": cell, "variant": variant,
+           "lower_s": round(time.time() - t0, 1)}
+    rec.update(analyze(lowered, mesh))
+    OUT.mkdir(parents=True, exist_ok=True)
+    (OUT / f"{cell}__{variant}.json").write_text(json.dumps(rec, indent=2))
+    print(f"{cell}/{variant}: hbm={rec.get('per_device_hbm_bytes',0)/2**30:.2f}GiB "
+          f"flops/dev={rec.get('hlo_text_flops_per_device',0):.3e} "
+          f"bytes/dev={rec.get('hlo_text_bytes_per_device',0):.3e} "
+          f"coll={rec.get('collective_link_bytes',0)/2**30:.1f}GiB")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, choices=sorted(VARIANTS))
+    ap.add_argument("--variant", default=None)
+    args = ap.parse_args()
+    variants = ([args.variant] if args.variant
+                else list(VARIANTS[args.cell]["variants"]))
+    for v in variants:
+        run(args.cell, v)
+
+
+if __name__ == "__main__":
+    main()

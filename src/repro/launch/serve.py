@@ -1,0 +1,102 @@
+"""Mixed-criticality serving driver (the paper's system end-to-end).
+
+Serves a small model with batched requests of mixed priority/criticality
+under the MESC scheduler (instruction-level = decode-step preemption,
+bank-pool cache residency, LO-budget mode switching), and compares
+against a non-preemptive (FIFO/run-to-completion) baseline.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b-smoke
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.scheduler import Policy
+from repro.core.serving import MESCServer, Request
+from repro.core.task import Crit
+from repro.models import lm
+from repro.models.common import CPU_RC
+
+
+def make_requests(cfg, rng, n_lo: int = 4, n_hi: int = 2,
+                  lo_len: int = 24, hi_len: int = 6):
+    reqs = []
+    rid = 0
+    for _ in range(n_lo):
+        reqs.append(Request(rid=rid, priority=10 + rid,
+                            prompt=rng.integers(0, cfg.vocab, 8,
+                                                dtype=np.int32),
+                            max_new_tokens=lo_len, crit=Crit.LO))
+        rid += 1
+    for _ in range(n_hi):
+        reqs.append(Request(rid=rid, priority=rid - n_lo,
+                            prompt=rng.integers(0, cfg.vocab, 8,
+                                                dtype=np.int32),
+                            max_new_tokens=hi_len, crit=Crit.HI))
+        rid += 1
+    return reqs
+
+
+def run(cfg, params, policy, reqs, hi_delay_steps: int = 3):
+    """LO requests submitted first; HI requests arrive mid-flight."""
+    srv = MESCServer(cfg, params, policy=policy, max_len=64)
+    # warmup: compile prefill+decode outside the measured window
+    warm = Request(rid=-1, priority=99,
+                   prompt=np.zeros(8, np.int32), max_new_tokens=2,
+                   crit=Crit.LO)
+    srv.submit(warm)
+    srv.run()
+    srv.requests.clear()
+    lo = [r for r in reqs if r.crit == Crit.LO]
+    hi = [r for r in reqs if r.crit == Crit.HI]
+    for r in lo:
+        srv.submit(r)
+    for _ in range(hi_delay_steps):
+        srv.step()
+    for r in hi:
+        srv.submit(r)
+    srv.run()
+    return srv.requests
+
+
+def summarize(name, reqs):
+    out = {}
+    for crit in (Crit.HI, Crit.LO):
+        rs = [r for r in reqs.values() if r.crit == crit and r.finished_at]
+        if not rs:
+            continue
+        ttft = [r.first_token_at - r.submitted_at for r in rs]
+        lat = [r.finished_at - r.submitted_at for r in rs]
+        out[crit.value] = (np.mean(ttft), np.mean(lat))
+        print(f"  {name:12s} {crit.value}: ttft={np.mean(ttft)*1e3:7.1f} ms "
+              f"latency={np.mean(lat)*1e3:7.1f} ms  n={len(rs)} "
+              f"saves={sum(r.saves for r in rs)}")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b-smoke")
+    args = ap.parse_args()
+    cfg = get_config(args.arch)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0), CPU_RC)
+    rng = np.random.default_rng(0)
+
+    print("MESC (instruction-level preemption):")
+    mesc = summarize("mesc", run(cfg, params, Policy.mesc(),
+                                 make_requests(cfg, rng)))
+    print("non-preemptive baseline:")
+    rng = np.random.default_rng(0)
+    base = summarize("np", run(cfg, params, Policy.non_preemptive(),
+                               make_requests(cfg, rng)))
+    if "HI" in mesc and "HI" in base:
+        sp = base["HI"][0] / max(mesc["HI"][0], 1e-9)
+        print(f"HI time-to-first-token speedup: {sp:.1f}x")
+
+
+if __name__ == "__main__":
+    main()

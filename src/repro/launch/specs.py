@@ -1,0 +1,74 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run inputs).
+
+``input_specs`` mirrors the shannon/kernels pattern: weak-type-correct,
+shardable, no device allocation.  For decode shapes the cache structure is
+obtained with jax.eval_shape over init_cache.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import lm
+from repro.models.common import RuntimeConfig, DEFAULT_RC
+
+SDS = jax.ShapeDtypeStruct
+
+
+def train_batch_specs(cfg: ArchConfig, shape: ShapeConfig,
+                      rc: RuntimeConfig = DEFAULT_RC) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "audio":
+        t = SDS((B, S, cfg.n_codebooks), jnp.int32)
+        return {"tokens": t, "labels": t}
+    if cfg.family == "vlm":
+        nf = cfg.n_frontend_tokens
+        return {
+            "tokens": SDS((B, S - nf), jnp.int32),
+            "labels": SDS((B, S - nf), jnp.int32),
+            "vis_embeds": SDS((B, nf, cfg.d_model), rc.compute_dtype),
+        }
+    t = SDS((B, S), jnp.int32)
+    return {"tokens": t, "labels": t}
+
+
+def prefill_batch_specs(cfg: ArchConfig, shape: ShapeConfig,
+                        rc: RuntimeConfig = DEFAULT_RC) -> Dict[str, Any]:
+    b = train_batch_specs(cfg, shape, rc)
+    b.pop("labels")
+    return b
+
+
+def decode_token_specs(cfg: ArchConfig, shape: ShapeConfig) -> Any:
+    B = shape.global_batch
+    if cfg.family == "audio":
+        return SDS((B, cfg.n_codebooks), jnp.int32)
+    return SDS((B,), jnp.int32)
+
+
+def cache_specs_abstract(cfg: ArchConfig, shape: ShapeConfig,
+                         rc: RuntimeConfig = DEFAULT_RC):
+    """Abstract cache pytree (ShapeDtypeStructs) for decode dry-runs."""
+    return jax.eval_shape(
+        lambda: lm.init_cache(cfg, shape.global_batch, shape.seq_len, rc))
+
+
+def params_abstract(cfg: ArchConfig, rc: RuntimeConfig = DEFAULT_RC):
+    return jax.eval_shape(
+        lambda: lm.init_params(cfg, jax.random.PRNGKey(0), rc))
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig,
+                rc: RuntimeConfig = DEFAULT_RC) -> Dict[str, Any]:
+    """All inputs for the step implied by shape.kind (excluding params/state)."""
+    if shape.kind == "train":
+        return {"batch": train_batch_specs(cfg, shape, rc)}
+    if shape.kind == "prefill":
+        return {"batch": prefill_batch_specs(cfg, shape, rc)}
+    if shape.kind == "decode":
+        return {"tokens": decode_token_specs(cfg, shape),
+                "cache": cache_specs_abstract(cfg, shape, rc)}
+    raise ValueError(shape.kind)

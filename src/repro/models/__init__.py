@@ -1,0 +1,1 @@
+from repro.models import lm, attention, ffn, recurrent, common  # noqa: F401

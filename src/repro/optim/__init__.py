@@ -1,0 +1,3 @@
+from repro.optim.adamw import (OptConfig, init_opt_state, adamw_update,
+                               lr_schedule, global_norm)
+from repro.optim.compression import compress_int8, decompress_int8

@@ -1,0 +1,283 @@
+"""Post-SPMD HLO text analysis with while-loop trip-count correction.
+
+``compiled.cost_analysis()`` counts each while-loop body ONCE, which
+undercounts scanned programs (scan-over-layers, flash KV scans) by their trip
+counts.  This module parses ``compiled.as_text()`` instead:
+
+  * computations are parsed into (name -> op lines) with a per-computation
+    symbol table (%var -> shape);
+  * while ops are resolved to (condition, body); the trip count is read from
+    the s32 constant in the canonicalized condition computation;
+  * a call-graph walk assigns every computation a multiplier
+    (entry = 1, while body = parent x trip, fusion-called = parent x 1);
+  * dot FLOPs            = 2 * out_elems * contracted_elems, summed with
+    multipliers over ALL computations (incl. fusion bodies);
+  * HBM bytes            = sum of (operand + output) bytes of materializing
+    top-level ops in CONTROL computations only (entry + while bodies) —
+    fusion internals are on-chip and excluded;
+  * collective payloads  = per-kind output bytes and ring-model link bytes,
+    with multipliers.
+
+This is the measured basis for the roofline terms in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1}
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.+?)\s+([a-z][a-z0-9\-]*)\(")
+_WHILE_RE = re.compile(r"condition=%?([\w\.\-]+), body=%?([\w\.\-]+)")
+_CALL_RE = re.compile(r"(?:calls|to_apply|true_computation|false_computation|"
+                      r"branch_computations)=\{?%?([\w\.\-]+(?:,\s*%?[\w\.\-]+)*)\}?")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_GROUP_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUP_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+COLLECTIVE_KINDS = ("all-reduce", "all-gather", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+_SKIP_BYTES_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+                   "bitcast", "after-all", "partition-id", "replica-id",
+                   "while", "conditional", "call"}
+
+
+def _shape_elems_and_bytes(type_str: str) -> Tuple[int, int]:
+    elems = 0
+    nbytes = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        nbytes += n * _DTYPE_BYTES[dt]
+    return elems, nbytes
+
+
+def _first_dims(type_str: str) -> Optional[List[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    kind: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op]
+    symbols: Dict[str, str]          # var -> type str
+
+
+def parse_computations(txt: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for line in txt.splitlines():
+        hdr = _COMP_HDR_RE.match(line)
+        if hdr and line.rstrip().endswith("{"):
+            cur = Computation(hdr.group(2), [], {})
+            comps[cur.name] = cur
+            if hdr.group(1):
+                entry = cur.name
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            op = Op(m.group(1), m.group(2), m.group(3), line)
+            cur.ops.append(op)
+            cur.symbols[op.name] = op.type_str
+    comps["__entry__"] = comps.get(entry) if entry else None
+    return comps
+
+
+def _while_edges(comps: Dict[str, Computation]):
+    """[(parent, body, trip), ...] and [(parent, callee)] for plain calls."""
+    whiles, calls = [], []
+    for name, comp in comps.items():
+        if name == "__entry__" or comp is None:
+            continue
+        for op in comp.ops:
+            if op.kind == "while":
+                m = _WHILE_RE.search(op.line)
+                if not m:
+                    continue
+                cond, body = m.group(1), m.group(2)
+                trip = 1
+                ccomp = comps.get(cond)
+                if ccomp is not None:
+                    consts = [int(c) for o in ccomp.ops
+                              for c in _CONST_RE.findall(o.line)]
+                    if consts:
+                        trip = max(max(consts), 1)
+                whiles.append((name, body, trip))
+            else:
+                for m in _CALL_RE.finditer(op.line):
+                    for callee in re.split(r",\s*", m.group(1)):
+                        calls.append((name, callee.lstrip("%")))
+    return whiles, calls
+
+
+def computation_multipliers(comps: Dict[str, Computation]):
+    """(multiplier per computation, set of 'control' computations)."""
+    entry = comps.get("__entry__")
+    if entry is None:
+        return {}, set()
+    whiles, calls = _while_edges(comps)
+    wmap = defaultdict(list)
+    cmap = defaultdict(list)
+    for p, b, t in whiles:
+        wmap[p].append((b, t))
+    for p, c in calls:
+        cmap[p].append(c)
+
+    mult: Dict[str, float] = defaultdict(float)
+    control = set()
+    seen_stack = []
+
+    def visit(name: str, m: float, is_control: bool):
+        if name not in comps or comps[name] is None or name in seen_stack:
+            return
+        mult[name] += m
+        if is_control:
+            control.add(name)
+        seen_stack.append(name)
+        for body, trip in wmap.get(name, ()):  # while bodies: control
+            visit(body, m * trip, True)
+        for callee in cmap.get(name, ()):      # fused/applied: not control
+            visit(callee, m, False)
+        seen_stack.pop()
+
+    visit(entry.name, 1.0, True)
+    return dict(mult), control
+
+
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    out_elems, _ = _shape_elems_and_bytes(op.type_str)
+    args = re.findall(r"\(\s*%([\w\.\-]+)", op.line)
+    m = _CONTRACT_RE.search(op.line)
+    if not args or m is None:
+        return 2.0 * out_elems  # degenerate
+    lhs_type = comp.symbols.get(args[0])
+    if lhs_type is None:
+        return 2.0 * out_elems
+    dims = _first_dims(lhs_type) or []
+    contracted = 1
+    for i in m.group(1).split(","):
+        if i and int(i) < len(dims):
+            contracted *= dims[int(i)]
+    return 2.0 * out_elems * contracted
+
+
+def _op_bytes(op: Op, comp: Computation) -> int:
+    """Approximate HBM traffic of one materializing op.
+
+    Slice-aware: dynamic-slice/gather read only the slice (2x output);
+    dynamic-update-slice/scatter touch only the update region (2x update).
+    Everything else: operands + output (XLA 'bytes accessed' convention;
+    an upper bound at CPU-fusion granularity — see DESIGN.md).
+    """
+    _, out_b = _shape_elems_and_bytes(op.type_str)
+    tag = op.kind + " " + op.name
+    if "dynamic-update-slice" in tag or "scatter" in tag:
+        ops_b = []
+        for arg in re.findall(r"%([\w\.\-]+)", op.line.split("(", 1)[1]):
+            t = comp.symbols.get(arg)
+            if t is not None:
+                ops_b.append(_shape_elems_and_bytes(t)[1])
+        small = sum(ops_b) - (max(ops_b) if ops_b else 0)
+        return 2 * small
+    if "slice" in tag or "gather" in tag:
+        # slice-semantics op (incl. fusions like add_slice_fusion reading a
+        # loop-iteration slice of a big buffer): traffic is output-sized plus
+        # operands no larger than the output
+        total = 2 * out_b
+        for arg in re.findall(r"%([\w\.\-]+)", op.line.split("(", 1)[1]):
+            t = comp.symbols.get(arg)
+            if t is not None:
+                b = _shape_elems_and_bytes(t)[1]
+                if b <= out_b:
+                    total += b
+        return total
+    total = out_b
+    for arg in re.findall(r"%([\w\.\-]+)", op.line.split("(", 1)[1]):
+        t = comp.symbols.get(arg)
+        if t is not None:
+            total += _shape_elems_and_bytes(t)[1]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    gm = _GROUP_RE.search(line)
+    if gm:
+        return len(gm.group(1).split(","))
+    gm2 = _GROUP_V2_RE.search(line)
+    if gm2:
+        return int(gm2.group(2))
+    return default
+
+
+def _link_bytes(kind: str, out_bytes: float, gsize: int) -> float:
+    g = max(gsize, 1)
+    if kind == "all-reduce":
+        return 2 * (g - 1) / g * out_bytes
+    if kind == "all-gather":
+        return (g - 1) / g * out_bytes
+    if kind == "reduce-scatter":
+        return (g - 1) * out_bytes          # input = out * g
+    if kind == "all-to-all":
+        return (g - 1) / g * out_bytes
+    return out_bytes                        # collective-permute
+
+
+def analyze_hlo(txt: str, default_group: int) -> dict:
+    comps = parse_computations(txt)
+    mult, control = computation_multipliers(comps)
+
+    flops = 0.0
+    bytes_hbm = 0.0
+    bytes_no_copies = 0.0   # optimistic: loop-carry copies alias on TPU
+    coll = {}
+    for name, m in mult.items():
+        comp = comps[name]
+        is_ctrl = name in control
+        for op in comp.ops:
+            base = op.kind.replace("-start", "")
+            if base == "dot":
+                flops += m * _dot_flops(op, comp)
+            if is_ctrl and op.kind not in _SKIP_BYTES_OPS:
+                b = m * _op_bytes(op, comp)
+                bytes_hbm += b
+                if op.kind != "copy" and "copy" not in op.name:
+                    bytes_no_copies += b
+            if base in COLLECTIVE_KINDS and is_ctrl:
+                _, ob = _shape_elems_and_bytes(op.type_str)
+                g = _group_size(op.line, default_group)
+                rec = coll.setdefault(base, {"count": 0.0, "out_bytes": 0.0,
+                                             "link_bytes": 0.0})
+                rec["count"] += m
+                rec["out_bytes"] += m * ob
+                rec["link_bytes"] += m * _link_bytes(base, ob, g)
+    link_total = sum(v["link_bytes"] for v in coll.values())
+    return {"flops": flops, "hbm_bytes": bytes_hbm,
+            "hbm_bytes_no_copies": bytes_no_copies,
+            "collectives": coll, "collective_link_bytes": link_total}

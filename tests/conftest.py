@@ -1,0 +1,9 @@
+import os
+
+# tests must see the real (single) CPU device — the 512-device flag is only
+# for the dry-run (see src/repro/launch/dryrun.py)
+os.environ.pop("XLA_FLAGS", None)
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

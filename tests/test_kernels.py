@@ -1,0 +1,89 @@
+"""Per-kernel correctness: shape/dtype sweeps, interpret=True vs ref.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.systolic_gemm import gemm_partial, systolic_gemm
+
+KEY = jax.random.PRNGKey(7)
+
+
+@pytest.mark.parametrize("M,K,N,bm,bn,bk", [
+    (128, 128, 128, 128, 128, 128),
+    (256, 512, 128, 128, 128, 128),
+    (512, 256, 384, 128, 128, 128),
+    (128, 1024, 256, 64, 128, 256),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_systolic_gemm_sweep(M, K, N, bm, bn, bk, dtype):
+    a = jax.random.normal(KEY, (M, K), jnp.float32).astype(dtype)
+    b = jax.random.normal(jax.random.fold_in(KEY, 1), (K, N),
+                          jnp.float32).astype(dtype)
+    out = systolic_gemm(a, b, bm=bm, bn=bn, bk=bk, interpret=True)
+    want = ref.gemm_ref(a, b)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-3
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol * K ** 0.5, rtol=tol)
+
+
+@pytest.mark.parametrize("split", [1, 2, 3])
+def test_gemm_preempt_resume(split):
+    """Preempting a GEMM mid-K and resuming from the saved accumulator is
+    exact — the step_wise_mvout analogue (paper SS V.A)."""
+    M = K = N = 512
+    bk = 128
+    a = jax.random.normal(KEY, (M, K), jnp.float32)
+    b = jax.random.normal(jax.random.fold_in(KEY, 2), (K, N), jnp.float32)
+    nk = K // bk
+    acc = jnp.zeros((M, N), jnp.float32)
+    acc = gemm_partial(a, b, acc, 0, split, bk=bk, interpret=True)
+    acc = gemm_partial(a, b, acc, split, nk, bk=bk, interpret=True)
+    np.testing.assert_allclose(np.asarray(acc), np.asarray(a @ b),
+                               rtol=1e-4, atol=1e-2)
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,S,dh,bq,bkv", [
+    (1, 4, 4, 128, 64, 64, 64),      # MHA
+    (2, 8, 2, 256, 64, 64, 128),     # GQA
+    (1, 8, 1, 128, 128, 32, 32),     # MQA
+])
+def test_flash_attention_sweep(B, Hq, Hkv, S, dh, bq, bkv):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Hq, S, dh), jnp.float32)
+    k = jax.random.normal(ks[1], (B, Hkv, S, dh), jnp.float32)
+    v = jax.random.normal(ks[2], (B, Hkv, S, dh), jnp.float32)
+    from repro.kernels.flash_attention import flash_attention_tpu
+    out = flash_attention_tpu(q, k, v, block_q=bq, block_kv=bkv,
+                              interpret=True)
+    want = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=5e-5)
+
+
+@pytest.mark.parametrize("pos", [0, 17, 255])
+@pytest.mark.parametrize("B,Hq,Hkv,S,dh", [(2, 8, 2, 256, 64),
+                                           (1, 4, 4, 512, 32)])
+def test_decode_attention_sweep(B, Hq, Hkv, S, dh, pos):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Hq, dh), jnp.float32)
+    k = jax.random.normal(ks[1], (B, Hkv, S, dh), jnp.float32)
+    v = jax.random.normal(ks[2], (B, Hkv, S, dh), jnp.float32)
+    from repro.kernels.decode_attention import decode_attention_tpu
+    out = decode_attention_tpu(q, k, v, pos, block_s=64, interpret=True)
+    want = ref.decode_attention_ref(q, k, v, pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=5e-5)
+
+
+@pytest.mark.parametrize("B,S,D,bs,bd", [(2, 128, 256, 32, 128),
+                                         (1, 64, 512, 64, 256)])
+def test_rglru_kernel_sweep(B, S, D, bs, bd):
+    ks = jax.random.split(KEY, 3)
+    a = jax.random.uniform(ks[0], (B, S, D), jnp.float32, 0.4, 0.999)
+    b = jax.random.normal(ks[1], (B, S, D), jnp.float32)
+    h0 = jax.random.normal(ks[2], (B, D), jnp.float32)
+    from repro.kernels.rglru_scan import rglru_scan_tpu
+    out = rglru_scan_tpu(a, b, h0, block_s=bs, block_d=bd, interpret=True)
+    want = ref.rglru_scan_ref(a, b, h0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5)

@@ -1,0 +1,159 @@
+"""MESC scheduler/executor unit + property tests.
+
+Covers: mode rules, AMC dropping, bank-allocation zero-copy fast path,
+instruction/operator preemption bounds, and the simulator invariant that
+MESC blocking is bounded by I(G) + T_sr + context-switch time.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (GemminiRT, Mode, Policy, TaskParams, TCB, Crit,
+                        generate_taskset, simulate, workload_library)
+from repro.core.isa import BANK_BYTES
+from repro.core.program import build_program
+from repro.core.scheduler import eligible_set, pick_next
+from repro.core.task import Status
+
+LIB = workload_library(include_archs=False)
+
+
+def _tcb(tid, prio, crit, status=Status.READY, resident=False):
+    p = TaskParams(tid=tid, priority=prio, period=1e6, deadline=1e6,
+                   c_lo=1e4, c_hi=2e4, crit=crit, eta=1, workload="small_gemm")
+    t = TCB(params=p, status=status)
+    t.data_in_accel = resident
+    return t
+
+
+class TestModeRules:
+    def test_lo_mode_priority_order(self):
+        tcbs = {0: _tcb(0, 5, Crit.LO), 1: _tcb(1, 2, Crit.HI),
+                2: _tcb(2, 1, Crit.LO)}
+        nxt = pick_next(tcbs, Mode.LO, [], Policy.mesc())
+        assert nxt.tid == 2  # highest priority wins regardless of crit
+
+    def test_hi_mode_prefers_hi(self):
+        tcbs = {0: _tcb(0, 1, Crit.LO), 1: _tcb(1, 9, Crit.HI)}
+        nxt = pick_next(tcbs, Mode.HI, [], Policy.mesc())
+        assert nxt.tid == 1  # HI beats higher-priority LO outside LO-mode
+
+    def test_lo_runs_in_hi_mode_when_no_hi_active(self):
+        """The imprecise-MCS stance: LO is never dropped (SS II.A)."""
+        tcbs = {0: _tcb(0, 1, Crit.LO)}
+        nxt = pick_next(tcbs, Mode.HI, [], Policy.mesc())
+        assert nxt is not None and nxt.tid == 0
+
+    def test_amc_drops_lo_outside_lo_mode(self):
+        tcbs = {0: _tcb(0, 1, Crit.LO)}
+        assert pick_next(tcbs, Mode.HI, [], Policy.amc()) is None
+        assert pick_next(tcbs, Mode.LO, [], Policy.amc()).tid == 0
+
+    def test_transition_only_resident_lo(self):
+        tcbs = {0: _tcb(0, 1, Crit.LO, resident=False),
+                1: _tcb(1, 2, Crit.LO, resident=True)}
+        nxt = pick_next(tcbs, Mode.TRANS, [], Policy.mesc())
+        assert nxt.tid == 1  # only not-yet-saved LO data may run
+
+
+class TestBankAllocation:
+    def test_zero_copy_when_banks_fit(self):
+        acc = GemminiRT(use_remapper=True)
+        prog = build_program("p", [(64, 64, 64)])
+        t = _tcb(0, 1, Crit.LO)
+        acc.note_execution(0, 1e5, prog)
+        br_fit = acc.context_save(t, drain_cycles=10, next_eta=2)
+        assert br_fit.scratchpad == 0          # zero-copy fast path
+        assert t.data_in_accel                 # banks stay locked
+        # without room, the scratchpad must be evacuated
+        acc2 = GemminiRT(use_remapper=True)
+        acc2.note_execution(0, 1e7, LIB["resnet50"])
+        t2 = _tcb(0, 1, Crit.LO)
+        br_full = acc2.context_save(t2, drain_cycles=10, next_eta=8)
+        assert br_full.scratchpad > 0
+        assert br_full.total > br_fit.total
+
+    def test_save_restore_roundtrip(self):
+        acc = GemminiRT()
+        t = _tcb(3, 1, Crit.LO)
+        acc.note_execution(3, 5e4, LIB["small_gemm"])
+        acc.context_save(t, drain_cycles=0, next_eta=8)
+        br = acc.context_restore(t)
+        assert t.data_in_accel
+        assert br.total >= 0
+
+    def test_remapper_write_read_release(self):
+        from repro.core.remapper import AddressRemapper
+        r = AddressRemapper()
+        r.write(1, 0, BANK_BYTES // 2)
+        assert r.locked_banks() == 1
+        assert r.resident_bytes(1) == BANK_BYTES // 2
+        assert r.read(1, 0) is not None
+        r.write(2, 0, 2 * BANK_BYTES)
+        assert r.locked_banks() == 3
+        r.release(1)
+        assert r.locked_banks() == 2
+        assert r.resident_bytes(1) == 0
+
+
+class TestPrograms:
+    def test_boundaries_monotone_and_bounded(self):
+        prog = LIB["alexnet"]
+        for off in (0.0, 1.0, 1234.5, prog.total_cycles * 0.7):
+            nb = prog.next_instruction_boundary(off)
+            assert nb > off
+            assert nb - off <= prog.max_instruction_cycles
+            ob = prog.next_operator_boundary(off)
+            assert ob >= nb or ob >= prog.total_cycles * 0.99
+
+    def test_fig2_hierarchy(self):
+        """workload >> operator >> instruction cycles (paper Fig. 2)."""
+        for name in ("alexnet", "resnet50", "transformer"):
+            p = LIB[name]
+            ops_sizes = p.operator_cycle_sizes()
+            assert p.total_cycles > ops_sizes.max() > p.max_instruction_cycles
+            assert p.total_cycles / p.max_instruction_cycles > 1e4
+
+    def test_instruction_stream_consistent(self):
+        p = LIB["small_gemm"]
+        insts = list(p.instructions())
+        assert len(insts) == p.n_instructions
+        assert sum(i.cost for i in insts) == p.total_cycles
+
+
+class TestSimulatorInvariants:
+    def test_blocking_hierarchy(self):
+        """MESC << limited << non-preemptive blocking (Fig. 1/2)."""
+        tasks = generate_taskset(0.7, seed=3, programs=LIB)
+        res = {}
+        for pol in (Policy.mesc(), Policy.limited(), Policy.non_preemptive()):
+            m = simulate(tasks, LIB, pol, duration=3e8, seed=2)
+            blocks = m.pi_blocking + m.ci_blocking
+            res[pol.name] = np.mean(blocks) if blocks else 0.0
+        assert res["mesc"] < res["lp"] < res["np"]
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 10 ** 6), u=st.floats(0.3, 0.8))
+    def test_mesc_blocking_bounded(self, seed, u):
+        """Under MESC, any single blocking interval is bounded by
+        I(G) + T_sr + save + restore (the paper's Eq. 1 structure)."""
+        tasks = generate_taskset(u, seed=seed, programs=LIB)
+        m = simulate(tasks, LIB, Policy.mesc(), duration=1e8, seed=seed)
+        max_inst = max(LIB[t.workload].max_instruction_cycles for t in tasks)
+        save = max(m.save_cycles) if m.save_cycles else 0
+        rest = max(m.restore_cycles) if m.restore_cycles else 0
+        bound = max_inst + 5000 + save + rest + 5000
+        for b in m.pi_blocking + m.ci_blocking:
+            assert b <= bound + 1
+
+    def test_overhead_below_5pct(self):
+        """Paper abstract: < 5% overhead."""
+        tasks = generate_taskset(0.6, seed=11, programs=LIB)
+        m = simulate(tasks, LIB, Policy.mesc(), duration=3e8, seed=4)
+        assert m.exec_cycles > 0
+        assert m.overhead_cycles / m.exec_cycles < 0.05
+
+    def test_amc_never_runs_lo_in_hi(self):
+        tasks = generate_taskset(0.8, seed=5, programs=LIB)
+        m = simulate(tasks, LIB, Policy.amc(), duration=2e8, seed=6)
+        assert m.lo_released_in_hi == 0

