@@ -1,15 +1,20 @@
-"""Shared helpers for the paper-figure benchmarks."""
+"""Shared helpers for the paper-figure benchmarks.
+
+The figures themselves are thin declarations over the campaign engine
+(``repro.experiments``): each defines a ``Sweep``/``FuncSweep`` plus a
+report function that aggregates the engine's tidy rows.  This module
+keeps the cross-figure constants (set counts, utilisation grid), the
+CSV summary emitter, and ``run_many`` — the original serial loop, kept
+as the reference implementation the engine is tested against
+(tests/test_experiments.py asserts bit-identical metrics).
+"""
 from __future__ import annotations
 
 import time
-from typing import Dict, List
+from typing import List
 
-import numpy as np
-
-from repro.core import Policy, generate_taskset, simulate, workload_library
-
-LIB = workload_library(include_archs=True)
-SIM_LIB = {k: v for k, v in LIB.items() if not k.startswith("arch:")}
+from repro.core import Policy, generate_taskset, simulate
+from repro.experiments.runner import cached_library
 
 DEFAULT_SETS = 100          # paper: 1000 (use --full)
 UTILS = (0.5, 0.6, 0.7, 0.8, 0.9, 0.95)
@@ -18,18 +23,18 @@ UTILS = (0.5, 0.6, 0.7, 0.8, 0.9, 0.95)
 def run_many(policy: Policy, *, n_sets: int, u: float, gamma: float = 0.5,
              n_tasks: int = 10, duration: float = 2e8, cf: float = 2.0,
              overrun_prob: float = 0.3, seed0: int = 0) -> List:
+    """Legacy serial reference: the engine's per-point seeding contract
+    (``point_seed(seed0, s) == seed0 + s`` for taskset AND simulator)
+    reproduces this loop exactly."""
+    lib = cached_library("sim")
     out = []
     for s in range(n_sets):
         tasks = generate_taskset(u, gamma=gamma, n_tasks=n_tasks, cf=cf,
-                                 seed=seed0 + s, programs=SIM_LIB)
-        out.append(simulate(tasks, SIM_LIB, policy, duration=duration,
+                                 seed=seed0 + s, programs=lib)
+        out.append(simulate(tasks, lib, policy, duration=duration,
                             seed=seed0 + s, overrun_prob=overrun_prob,
                             cf=cf))
     return out
-
-
-def mean(xs) -> float:
-    return float(np.mean(xs)) if len(xs) else 0.0
 
 
 class Timer:

@@ -1,40 +1,55 @@
 """Fig. 10 — survivability of LO-tasks in HI-mode vs gamma / beta.
 
 Survivability = completed / released LO jobs while the system is degraded
-(paper SS VIII.D; Obs. 5: >20% even at extreme gamma)."""
+(paper SS VIII.D; Obs. 5: >20% even at extreme gamma).
+
+Same sweep shape as Fig. 9 but with overrun_prob = 0.5 (more HI-mode
+residency); the cell metric is a ratio of sums across runs.
+"""
 from __future__ import annotations
 
 import numpy as np
 
 from repro.core import Policy
-from benchmarks.common import DEFAULT_SETS, Timer, emit, mean, run_many
+from repro.experiments import Campaign, Sweep, group_rows, ratio_of_sums
+from benchmarks.common import DEFAULT_SETS, Timer, emit
 
 GAMMAS = (0.2, 0.4, 0.5, 0.6, 0.8)
 BETAS = (4, 8, 10, 14, 20)
+U = 0.8
+OVERRUN = 0.5
 
 
-def _surv(ms):
-    rel = sum(m.lo_released_in_hi for m in ms)
-    done = sum(m.lo_done_in_hi for m in ms)
-    return done / rel if rel else float("nan")
-
-
-def main(full: bool = False):
+def sweeps(full: bool = False):
     n_sets = 400 if full else max(DEFAULT_SETS // 2, 30)
-    u = 0.8
+    return (Sweep(name="fig10_gamma", policies=(Policy.mesc(),),
+                  utils=(U,), gammas=GAMMAS, n_sets=n_sets,
+                  overrun_prob=OVERRUN),
+            Sweep(name="fig10_beta", policies=(Policy.mesc(),),
+                  utils=(U,), n_tasks=BETAS, n_sets=n_sets,
+                  overrun_prob=OVERRUN))
+
+
+def _surv(cell) -> float:
+    return ratio_of_sums(cell, "lo_done_in_hi", "lo_released_in_hi")
+
+
+def main(full: bool = False, **campaign_kw):
+    gamma_sweep, beta_sweep = sweeps(full)
+    n_sets = gamma_sweep.n_sets
     out = {}
     with Timer() as t:
+        g_cells = group_rows(Campaign(gamma_sweep, **campaign_kw).collect(),
+                             "gamma")
+        b_cells = group_rows(Campaign(beta_sweep, **campaign_kw).collect(),
+                             "n_tasks")
         print("gamma,survivability")
         for g in GAMMAS:
-            ms = run_many(Policy.mesc(), n_sets=n_sets, u=u, gamma=g,
-                          overrun_prob=0.5)
-            out[("gamma", g)] = _surv(ms)
+            out[("gamma", g)] = _surv(g_cells[(g,)])
             print(f"{g},{out[('gamma', g)]:.3f}")
         print("beta,survivability")
         for b in BETAS:
-            ms = run_many(Policy.mesc(), n_sets=n_sets, u=u, n_tasks=b,
-                          overrun_prob=0.5)
-            out[("beta", b)] = _surv(ms)
+            out[("beta", b)] = _surv(b_cells[(b,)])
             print(f"{b},{out[('beta', b)]:.3f}")
     worst = np.nanmin([v for v in out.values()])
     emit("fig10_survivability",

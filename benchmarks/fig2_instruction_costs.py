@@ -3,33 +3,53 @@
 Reproduces the three panels: (a) whole-workload cycles per size bucket,
 (b) operator-level cycles, (c) per-instruction cycles by type — the
 quantitative motivation for instruction-level preemption.
+
+Declared as a campaign-engine FuncSweep: one cached point per workload.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import LIB, Timer, emit
+from repro.experiments import Campaign, FuncSweep
+from repro.experiments.runner import cached_library
+from benchmarks.common import Timer, emit
+
+COLUMNS = ("workload", "bucket", "total_cycles", "op_max", "op_mean",
+           "inst_max", "inst_mean")
 
 
-def main(full: bool = False):
-    rows = []
+def workload_row(workload: str) -> dict:
+    """Engine point: instruction-cost statistics of one workload."""
+    prog = cached_library("all")[workload]
+    ops = prog.operator_cycle_sizes()
+    hist = prog.instruction_cost_histogram()
+    inst_mean = (sum(c * n for arr in hist.values() for c, n in arr)
+                 / max(prog.n_instructions, 1))
+    bucket = ("small" if prog.total_cycles <= 1e6 else
+              "medium" if prog.total_cycles <= 1e7 else "large")
+    return {"workload": workload, "bucket": bucket,
+            "total_cycles": int(prog.total_cycles),
+            "op_max": int(ops.max()), "op_mean": int(ops.mean()),
+            "inst_max": int(prog.max_instruction_cycles),
+            "inst_mean": round(inst_mean, 1)}
+
+
+def sweep(full: bool = False) -> FuncSweep:
+    names = sorted(cached_library("all"))
+    return FuncSweep.over("fig2_instruction_costs",
+                          "benchmarks.fig2_instruction_costs:workload_row",
+                          [{"workload": n} for n in names])
+
+
+def main(full: bool = False, **campaign_kw):
     with Timer() as t:
-        for name, prog in sorted(LIB.items()):
-            ops = prog.operator_cycle_sizes()
-            hist = prog.instruction_cost_histogram()
-            inst_max = prog.max_instruction_cycles
-            inst_mean = (sum(c * n for arr in hist.values() for c, n in arr)
-                         / max(prog.n_instructions, 1))
-            bucket = ("small" if prog.total_cycles <= 1e6 else
-                      "medium" if prog.total_cycles <= 1e7 else "large")
-            rows.append((name, bucket, prog.total_cycles, int(ops.max()),
-                         int(ops.mean()), inst_max, round(inst_mean, 1)))
-    print("workload,bucket,total_cycles,op_max,op_mean,inst_max,inst_mean")
+        rows = Campaign(sweep(full), **campaign_kw).collect()
+    print(",".join(COLUMNS))
     for r in rows:
-        print(",".join(str(x) for x in r))
-    tot = np.array([r[2] for r in rows], float)
-    opm = np.array([r[3] for r in rows], float)
-    im = np.array([r[5] for r in rows], float)
+        print(",".join(str(r[c]) for c in COLUMNS))
+    tot = np.array([r["total_cycles"] for r in rows], float)
+    opm = np.array([r["op_max"] for r in rows], float)
+    im = np.array([r["inst_max"] for r in rows], float)
     ratio_wo = np.median(tot / opm)
     ratio_oi = np.median(opm / im)
     emit("fig2_instruction_costs", t.seconds * 1e6 / max(len(rows), 1),

@@ -6,47 +6,65 @@ per workload, the measured working set, the derived eta, and the resulting
 context-switch cost when the next task fits alongside (zero-copy) vs when
 the scratchpad must be evacuated — the quantitative basis for the bank
 allocator's Obs. 1 speedup.
+
+Declared as a campaign-engine FuncSweep: one cached point per workload.
 """
 from __future__ import annotations
 
 from repro.core import GemminiRT, Crit, TaskParams, TCB
 from repro.core.isa import BANK_BYTES, SCRATCHPAD_BANKS
-from repro.core.program import workload_library
 from repro.core.taskgen import eta_for
+from repro.experiments import Campaign, FuncSweep
+from repro.experiments.runner import cached_library
 from benchmarks.common import Timer, emit
 
+COLUMNS = ("workload", "working_set_KB", "eta_banks", "save_fit_cycles",
+           "save_evict_cycles", "zero_copy")
 
-def main(full: bool = False):
-    lib = workload_library(include_archs=True)
-    print("workload,working_set_KB,eta_banks,save_fit_cycles,"
-          "save_evict_cycles,zero_copy")
-    n_zero = 0
-    rows = 0
+
+def bank_row(workload: str) -> dict:
+    """Engine point: save cost with/without room for the next task."""
+    prog = cached_library("all")[workload]
+    eta = eta_for(prog)
+    p = TaskParams(0, 0, 1e9, 1e9, prog.total_cycles,
+                   2 * prog.total_cycles, Crit.LO, eta, workload=workload)
+    # context save when the next task fits alongside
+    acc = GemminiRT()
+    tcb = TCB(params=p)
+    acc.note_execution(0, prog.total_cycles, prog)
+    br_fit = acc.context_save(tcb, drain_cycles=0,
+                              next_eta=max(SCRATCHPAD_BANKS - eta, 0))
+    # and when it does not (full evacuation)
+    acc2 = GemminiRT()
+    tcb2 = TCB(params=p)
+    acc2.note_execution(0, prog.total_cycles, prog)
+    br_evict = acc2.context_save(tcb2, drain_cycles=0,
+                                 next_eta=SCRATCHPAD_BANKS)
+    return {"workload": workload,
+            "working_set_KB": prog.working_set_bytes // 1024,
+            "eta_banks": eta,
+            "save_fit_cycles": br_fit.total,
+            "save_evict_cycles": br_evict.total,
+            "zero_copy": bool(br_fit.scratchpad == 0)}
+
+
+def sweep(full: bool = False) -> FuncSweep:
+    names = sorted(cached_library("all"))
+    return FuncSweep.over("fig6_banks", "benchmarks.fig6_banks:bank_row",
+                          [{"workload": n} for n in names])
+
+
+def main(full: bool = False, **campaign_kw):
     with Timer() as t:
-        for name, prog in sorted(lib.items()):
-            eta = eta_for(prog)
-            # context save when the next task fits alongside
-            acc = GemminiRT()
-            p = TaskParams(0, 0, 1e9, 1e9, prog.total_cycles,
-                           2 * prog.total_cycles, Crit.LO, eta,
-                           workload=name)
-            tcb = TCB(params=p)
-            acc.note_execution(0, prog.total_cycles, prog)
-            fit_eta = max(SCRATCHPAD_BANKS - eta, 0)
-            br_fit = acc.context_save(tcb, drain_cycles=0, next_eta=fit_eta)
-            # and when it does not (full evacuation)
-            acc2 = GemminiRT()
-            tcb2 = TCB(params=p)
-            acc2.note_execution(0, prog.total_cycles, prog)
-            br_evict = acc2.context_save(tcb2, drain_cycles=0,
-                                         next_eta=SCRATCHPAD_BANKS)
-            zero = br_fit.scratchpad == 0
-            n_zero += zero
-            rows += 1
-            print(f"{name},{prog.working_set_bytes // 1024},{eta},"
-                  f"{br_fit.total},{br_evict.total},{zero}")
-    emit("fig6_banks", t.seconds * 1e6 / max(rows, 1),
-         f"zero_copy_possible={n_zero}/{rows};bank={BANK_BYTES // 1024}KB")
+        rows = Campaign(sweep(full), **campaign_kw).collect()
+    print(",".join(COLUMNS))
+    for r in rows:
+        print(",".join(str(r[c]) for c in COLUMNS))
+    n_zero = sum(r["zero_copy"] for r in rows)
+    emit("fig6_banks", t.seconds * 1e6 / max(len(rows), 1),
+         f"zero_copy_possible={n_zero}/{len(rows)};"
+         f"bank={BANK_BYTES // 1024}KB")
+    return rows
 
 
 if __name__ == "__main__":

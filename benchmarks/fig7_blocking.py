@@ -4,47 +4,62 @@ Columns per U: C-Save / C-Restore (MESC), the same without the bank model
 (Obs. 1: +4000-6000 cycles), Pi-I / Ci-I under MESC, and Pi-I / Ci-I with
 the context-switch mechanism removed (non-preemptive) — from which the
 paper's ~250x / ~300x accelerations follow (Obs. 2).
+
+Declared as one campaign-engine sweep (3 policies x 6 utilisations);
+aggregation uses pooled sums, matching the legacy concatenated-list
+means exactly.
 """
 from __future__ import annotations
+
+import dataclasses
 
 import numpy as np
 
 from repro.core import Policy
-from benchmarks.common import DEFAULT_SETS, Timer, UTILS, emit, mean, run_many
+from repro.experiments import Campaign, Sweep, group_rows, pooled_mean
+from benchmarks.common import DEFAULT_SETS, Timer, UTILS, emit
+
+POLICIES = (Policy.mesc(),
+            dataclasses.replace(Policy.mesc(use_banks=False),
+                                name="mesc-noB"),
+            Policy.non_preemptive())
 
 
-def main(full: bool = False):
-    n_sets = 1000 if full else DEFAULT_SETS
-    n_sets_blocking = max(n_sets // 5, 20)
+def sweep(full: bool = False) -> Sweep:
+    n_sets = max((1000 if full else DEFAULT_SETS) // 5, 20)
+    return Sweep(name="fig7_blocking", policies=POLICIES, utils=UTILS,
+                 n_sets=n_sets)
+
+
+def main(full: bool = False, **campaign_kw):
+    with Timer() as t:
+        rows = Campaign(sweep(full), **campaign_kw).collect()
+    cells = group_rows(rows, "policy", "u")
     print("u,c_save,c_restore,c_save_noB,c_restore_noB,"
           "pi_mesc,ci_mesc,pi_noCS,ci_noCS,pi_speedup,ci_speedup")
     ratios = []
-    with Timer() as t:
-        for u in UTILS:
-            ms = run_many(Policy.mesc(), n_sets=n_sets_blocking, u=u)
-            mb = run_many(Policy.mesc(use_banks=False),
-                          n_sets=n_sets_blocking, u=u)
-            mn = run_many(Policy.non_preemptive(), n_sets=n_sets_blocking,
-                          u=u)
-            row = {
-                "c_save": mean(sum((m.save_cycles for m in ms), [])),
-                "c_restore": mean(sum((m.restore_cycles for m in ms), [])),
-                "c_save_noB": mean(sum((m.save_cycles for m in mb), [])),
-                "c_restore_noB": mean(sum((m.restore_cycles for m in mb), [])),
-                "pi_mesc": mean(sum((m.pi_blocking for m in ms), [])),
-                "ci_mesc": mean(sum((m.ci_blocking for m in ms), [])),
-                "pi_noCS": mean(sum((m.pi_blocking for m in mn), [])),
-                "ci_noCS": mean(sum((m.ci_blocking for m in mn), [])),
-            }
-            pi_sp = row["pi_noCS"] / max(row["pi_mesc"], 1.0)
-            ci_sp = row["ci_noCS"] / max(row["ci_mesc"], 1.0)
-            ratios.append((pi_sp, ci_sp,
-                           row["c_save_noB"] - row["c_save"]))
-            print(f"{u}," + ",".join(f"{row[k]:.0f}" for k in
-                                     ("c_save", "c_restore", "c_save_noB",
-                                      "c_restore_noB", "pi_mesc", "ci_mesc",
-                                      "pi_noCS", "ci_noCS"))
-                  + f",{pi_sp:.0f},{ci_sp:.0f}")
+    for u in UTILS:
+        ms = cells[("mesc", u)]
+        mb = cells[("mesc-noB", u)]
+        mn = cells[("np", u)]
+        row = {
+            "c_save": pooled_mean(ms, "save"),
+            "c_restore": pooled_mean(ms, "restore"),
+            "c_save_noB": pooled_mean(mb, "save"),
+            "c_restore_noB": pooled_mean(mb, "restore"),
+            "pi_mesc": pooled_mean(ms, "pi"),
+            "ci_mesc": pooled_mean(ms, "ci"),
+            "pi_noCS": pooled_mean(mn, "pi"),
+            "ci_noCS": pooled_mean(mn, "ci"),
+        }
+        pi_sp = row["pi_noCS"] / max(row["pi_mesc"], 1.0)
+        ci_sp = row["ci_noCS"] / max(row["ci_mesc"], 1.0)
+        ratios.append((pi_sp, ci_sp, row["c_save_noB"] - row["c_save"]))
+        print(f"{u}," + ",".join(f"{row[k]:.0f}" for k in
+                                 ("c_save", "c_restore", "c_save_noB",
+                                  "c_restore_noB", "pi_mesc", "ci_mesc",
+                                  "pi_noCS", "ci_noCS"))
+              + f",{pi_sp:.0f},{ci_sp:.0f}")
     pi_all = np.mean([r[0] for r in ratios])
     ci_all = np.mean([r[1] for r in ratios])
     dbank = np.mean([r[2] for r in ratios])

@@ -2,12 +2,19 @@
 
 Systems: MESC (with CS), MESC without CS (non-preemptive), AMC with CS,
 AMC without CS.  Success = no task misses a deadline during the run
-(HI-scope success also reported)."""
+(HI-scope success also reported).
+
+One engine sweep over 4 policies x 6 utilisations; policy names stay
+canonical ('mesc', 'np', ...) so cache points are shared with other
+figures sweeping the same systems.
+"""
 from __future__ import annotations
 
 from repro.core import Policy
-from benchmarks.common import DEFAULT_SETS, Timer, UTILS, emit, run_many
+from repro.experiments import Campaign, Sweep, frac, group_rows
+from benchmarks.common import DEFAULT_SETS, Timer, UTILS, emit
 
+# display label -> canonical policy
 SYSTEMS = (("mesc", Policy.mesc()),
            ("mesc_noCS", Policy.non_preemptive()),
            ("amc_CS", Policy.amc()),
@@ -15,23 +22,34 @@ SYSTEMS = (("mesc", Policy.mesc()),
                                name="amc-np")))
 
 
-def main(full: bool = False):
+def sweep(full: bool = False) -> Sweep:
     n_sets = 1000 if full else DEFAULT_SETS
+    return Sweep(name="fig8_success",
+                 policies=tuple(p for _, p in SYSTEMS),
+                 utils=UTILS, n_sets=n_sets)
+
+
+def main(full: bool = False, **campaign_kw):
+    sw = sweep(full)
+    with Timer() as t:
+        rows = Campaign(sw, **campaign_kw).collect()
+    n_sets = sw.n_sets
+    cells = group_rows(rows, "policy", "u")
     print("u," + ",".join(n for n, _ in SYSTEMS)
           + "," + ",".join(n + "_hi" for n, _ in SYSTEMS))
     res = {}
-    with Timer() as t:
-        for u in UTILS:
-            row_all, row_hi = [], []
-            for name, pol in SYSTEMS:
-                ms = run_many(pol, n_sets=n_sets, u=u)
-                row_all.append(sum(m.success() for m in ms) / len(ms))
-                row_hi.append(sum(m.success("HI") for m in ms) / len(ms))
-                res[(name, u)] = (row_all[-1], row_hi[-1])
-            print(f"{u}," + ",".join(f"{x:.3f}" for x in row_all + row_hi))
+    for u in UTILS:
+        row_all, row_hi = [], []
+        for label, pol in SYSTEMS:
+            cell = cells[(pol.name, u)]
+            row_all.append(frac(cell, "success_all"))
+            row_hi.append(frac(cell, "success_hi"))
+            res[(label, u)] = (row_all[-1], row_hi[-1])
+        print(f"{u}," + ",".join(f"{x:.3f}" for x in row_all + row_hi))
     mesc95 = res[("mesc", 0.95)][1]
     nocs85 = res[("mesc_noCS", 0.9)][1]
-    emit("fig8_success", t.seconds * 1e6 / (len(UTILS) * len(SYSTEMS) * n_sets),
+    emit("fig8_success",
+         t.seconds * 1e6 / (len(UTILS) * len(SYSTEMS) * n_sets),
          f"mesc_hi@0.95={mesc95:.2f};noCS_hi@0.9={nocs85:.2f}")
     return res
 

@@ -1,35 +1,50 @@
 """Fig. 9 — HI-mode successful ratio under varying gamma (HI share) and
-beta (tasks per set)."""
+beta (tasks per set).
+
+Two engine sweeps (one per varied axis) at u = 0.8; each point is one
+taskset + one MESC run.
+"""
 from __future__ import annotations
 
 from repro.core import Policy
-from benchmarks.common import DEFAULT_SETS, Timer, emit, run_many
+from repro.experiments import Campaign, Sweep, frac, group_rows
+from benchmarks.common import DEFAULT_SETS, Timer, emit
 
 GAMMAS = (0.2, 0.4, 0.5, 0.6, 0.8)
 BETAS = (4, 8, 10, 14, 20)
+U = 0.8
 
 
-def main(full: bool = False):
+def sweeps(full: bool = False):
     n_sets = 400 if full else max(DEFAULT_SETS // 2, 30)
-    u = 0.8
+    return (Sweep(name="fig9_gamma", policies=(Policy.mesc(),),
+                  utils=(U,), gammas=GAMMAS, n_sets=n_sets),
+            Sweep(name="fig9_beta", policies=(Policy.mesc(),),
+                  utils=(U,), n_tasks=BETAS, n_sets=n_sets))
+
+
+def main(full: bool = False, **campaign_kw):
+    gamma_sweep, beta_sweep = sweeps(full)
+    n_sets = gamma_sweep.n_sets
     out = {}
     with Timer() as t:
+        g_cells = group_rows(Campaign(gamma_sweep, **campaign_kw).collect(),
+                             "gamma")
+        b_cells = group_rows(Campaign(beta_sweep, **campaign_kw).collect(),
+                             "n_tasks")
         print("gamma,hi_success")
         for g in GAMMAS:
-            ms = run_many(Policy.mesc(), n_sets=n_sets, u=u, gamma=g)
-            r = sum(m.success("HI") for m in ms) / len(ms)
-            out[("gamma", g)] = r
-            print(f"{g},{r:.3f}")
+            out[("gamma", g)] = frac(g_cells[(g,)], "success_hi")
+            print(f"{g},{out[('gamma', g)]:.3f}")
         print("beta,hi_success")
         for b in BETAS:
-            ms = run_many(Policy.mesc(), n_sets=n_sets, u=u, n_tasks=b)
-            r = sum(m.success("HI") for m in ms) / len(ms)
-            out[("beta", b)] = r
-            print(f"{b},{r:.3f}")
+            out[("beta", b)] = frac(b_cells[(b,)], "success_hi")
+            print(f"{b},{out[('beta', b)]:.3f}")
     drop_g = out[("gamma", 0.2)] - out[("gamma", 0.8)]
     spread_b = max(out[(k, b)] for k, b in out if k == "beta") - \
         min(out[(k, b)] for k, b in out if k == "beta")
-    emit("fig9_hi_success", t.seconds * 1e6 / ((len(GAMMAS) + len(BETAS)) * n_sets),
+    emit("fig9_hi_success",
+         t.seconds * 1e6 / ((len(GAMMAS) + len(BETAS)) * n_sets),
          f"gamma_drop={drop_g:.2f};beta_spread={spread_b:.2f}")
     return out
 

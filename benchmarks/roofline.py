@@ -12,6 +12,9 @@ upper bound at CPU-XLA fusion granularity (DESIGN.md SS7).
 
 MODEL_FLOPS = 6*N*D (train) / 2*N*D (prefill/decode), N = active params —
 the ratio against compiled FLOPs exposes remat/redundancy waste.
+
+Declared as a campaign-engine FuncSweep with ``cache=False``: cells read
+mutable dry-run artifacts from disk, so they always re-analyze.
 """
 from __future__ import annotations
 
@@ -19,6 +22,7 @@ import json
 from pathlib import Path
 
 from repro.configs import ARCHS, SHAPES_BY_NAME, supports_shape
+from repro.experiments import Campaign, FuncSweep
 
 PEAK_FLOPS = 197e12          # bf16 / chip
 HBM_BW = 819e9               # B/s / chip
@@ -53,20 +57,16 @@ def suggestion(dom: str, arch: str, shape: str) -> str:
     return "MXU-align tile shapes; skip masked causal blocks"
 
 
-def load_cells(pod: str = "pod1"):
-    cells = []
-    for arch in sorted(ARCHS):
-        for shape in SHAPE_ORDER:
-            if not supports_shape(ARCHS[arch], SHAPES_BY_NAME[shape]):
-                cells.append((arch, shape, None))
-                continue
-            p = RESULTS / f"{arch}__{shape}__{pod}.json"
-            cells.append((arch, shape,
-                          json.loads(p.read_text()) if p.exists() else None))
-    return cells
-
-
-def analyze_cell(arch: str, shape: str, d: dict) -> dict:
+def cell_row(arch: str, shape: str, pod: str = "pod1") -> dict:
+    """Engine point: roofline analysis of one (arch, shape) cell."""
+    if not supports_shape(ARCHS[arch], SHAPES_BY_NAME[shape]):
+        return {"arch": arch, "shape": shape, "status": "skip"}
+    p = RESULTS / f"{arch}__{shape}__{pod}.json"
+    if not p.exists():
+        return {"arch": arch, "shape": shape, "status": "missing"}
+    d = json.loads(p.read_text())
+    if d.get("status") != "ok":
+        return {"arch": arch, "shape": shape, "status": "error"}
     n_dev = d.get("n_devices", 256)
     fl = d.get("hlo_text_flops_per_device", 0.0)
     by = d.get("hlo_text_bytes_no_copies",
@@ -82,35 +82,41 @@ def analyze_cell(arch: str, shape: str, d: dict) -> dict:
     ratio = mf / hlo_global if hlo_global else 0.0
     bound = max(t_c, t_m, t_l)
     frac = t_c / bound if bound else 0.0     # roofline fraction (compute)
-    return {"arch": arch, "shape": shape, "compute_s": t_c, "memory_s": t_m,
-            "collective_s": t_l, "dominant": dom, "model_flops": mf,
-            "useful_ratio": ratio, "roofline_fraction": frac,
+    return {"arch": arch, "shape": shape, "status": "ok",
+            "compute_s": t_c, "memory_s": t_m, "collective_s": t_l,
+            "dominant": dom, "model_flops": mf, "useful_ratio": ratio,
+            "roofline_fraction": frac,
             "hbm_gib": d.get("per_device_hbm_bytes", 0) / 2 ** 30,
-            "fits": d.get("per_device_hbm_bytes", 0) < 16 * 2 ** 30,
-            "status": d.get("status")}
+            "fits": bool(d.get("per_device_hbm_bytes", 0) < 16 * 2 ** 30)}
 
 
-def main(full: bool = False):
-    cells = load_cells()
+def sweep(full: bool = False) -> FuncSweep:
+    items = [{"arch": arch, "shape": shape}
+             for arch in sorted(ARCHS) for shape in SHAPE_ORDER]
+    return FuncSweep.over("roofline", "benchmarks.roofline:cell_row",
+                          items, cache=False)
+
+
+def main(full: bool = False, **campaign_kw):
+    cells = Campaign(sweep(full), **campaign_kw).collect()
     rows = []
     print("arch,shape,compute_ms,memory_ms,collective_ms,dominant,"
           "useful_ratio,roofline_frac,hbm_gib,fits")
     md = ["| arch | shape | compute | memory | collective | dominant | "
           "useful | roofline | HBM | fix |",
           "|---|---|---|---|---|---|---|---|---|---|"]
-    for arch, shape, d in cells:
-        if d is None:
-            sk = "SKIP(sub-quadratic-only)" \
-                if not supports_shape(ARCHS[arch], SHAPES_BY_NAME[shape]) \
-                else "MISSING"
+    for r in cells:
+        arch, shape = r["arch"], r["shape"]
+        if r["status"] in ("skip", "missing"):
+            sk = ("SKIP(sub-quadratic-only)" if r["status"] == "skip"
+                  else "MISSING")
             print(f"{arch},{shape},{sk},,,,,,,")
             md.append(f"| {arch} | {shape} | {sk} | | | | | | | |")
             continue
-        if d.get("status") != "ok":
+        if r["status"] != "ok":
             print(f"{arch},{shape},ERROR,,,,,,,")
             md.append(f"| {arch} | {shape} | ERROR | | | | | | | |")
             continue
-        r = analyze_cell(arch, shape, d)
         rows.append(r)
         print(f"{arch},{shape},{r['compute_s']*1e3:.1f},"
               f"{r['memory_s']*1e3:.1f},{r['collective_s']*1e3:.1f},"

@@ -1,8 +1,17 @@
 """Benchmark entry point: one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV summary lines (plus the per-figure
-CSV blocks above them).  ``--full`` uses the paper's 1000 task sets per
-point (slow); default is a statistically-meaningful reduction.
+Every figure is a declaration over the campaign engine
+(``repro.experiments``): points fan out across worker processes and are
+cached on disk by content hash, so a re-run of an unchanged figure is
+pure cache replay.  Prints ``name,us_per_call,derived`` CSV summary
+lines (plus the per-figure CSV blocks above them).
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only fig7,fig8]
+        [--workers N] [--cache-dir DIR] [--no-cache] [--smoke]
+
+``--full`` uses the paper's 1000 task sets per point (slow); default is
+a statistically-meaningful reduction.  ``--smoke`` runs a 2-point sweep
+end-to-end (used by CI).
 """
 from __future__ import annotations
 
@@ -10,14 +19,46 @@ import argparse
 import sys
 
 
+def smoke(**campaign_kw) -> None:
+    """Tiny end-to-end campaign: 2 points through the full engine path."""
+    from repro.core import Policy
+    from repro.experiments import Campaign, Sweep
+    sweep = Sweep(name="smoke", policies=(Policy.mesc(),), utils=(0.7,),
+                  n_sets=2, duration=2e6)
+    camp = Campaign(sweep, **campaign_kw)
+    rows = camp.collect()
+    print("point,policy,u,seed,jobs,success_all")
+    for r in rows:
+        print(f"{r['set_index']},{r['policy']},{r['u']},{r['seed']},"
+              f"{r['jobs_lo'] + r['jobs_hi']},{r['success_all']}")
+    print(f"smoke,0.0,points={len(rows)};hits={camp.stats['hits']};"
+          f"misses={camp.stats['misses']}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale experiment sizes (1000 task sets)")
     ap.add_argument("--only", default=None,
-                    help="comma-separated subset (fig2,fig7,fig8,fig9,"
-                         "fig10,overhead,roofline)")
+                    help="comma-separated subset (fig2,fig6,fig7,fig8,"
+                         "fig9,fig10,overhead,roofline)")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="worker processes per campaign "
+                         "(default: CPU count / $REPRO_WORKERS)")
+    ap.add_argument("--cache-dir", default=None,
+                    help="result-cache root (default: results/campaigns "
+                         "/ $REPRO_CACHE_DIR)")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="always re-simulate; write nothing to disk")
+    ap.add_argument("--smoke", action="store_true",
+                    help="run a tiny 2-point campaign and exit (CI)")
     args = ap.parse_args()
+    campaign_kw = dict(workers=args.workers, cache_dir=args.cache_dir,
+                       use_cache=not args.no_cache)
+
+    if args.smoke:
+        smoke(**campaign_kw)
+        return
 
     from benchmarks import (fig2_instruction_costs, fig6_banks,
                             fig7_blocking, fig8_success, fig9_hi_success,
@@ -37,7 +78,7 @@ def main() -> None:
     for name in only:
         print(f"# === {name} ===", file=sys.stderr)
         try:
-            table[name](full=args.full)
+            table[name](full=args.full, **campaign_kw)
         except Exception as e:  # keep the harness going
             print(f"{name},0,ERROR:{type(e).__name__}:{e}")
 

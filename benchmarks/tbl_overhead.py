@@ -6,51 +6,69 @@ scheduler cycles as a fraction of useful execution (< 5%, paper abstract),
 and (ii) the per-component context-switch cycle decomposition (drain /
 accumulator / config buffer / remap block / scratchpad), mirroring the
 per-component hardware breakdown.
+
+Two engine sweeps: a FuncSweep for the per-workload decomposition and a
+simulation Sweep (u in {0.5, 0.7, 0.9}) for the overhead fraction.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from repro.core import GemminiRT, Policy, TaskParams, TCB, Crit
-from repro.core.program import workload_library
-from benchmarks.common import DEFAULT_SETS, Timer, emit, run_many
+from repro.experiments import Campaign, FuncSweep, Sweep, group_rows
+from repro.experiments.runner import cached_library
+from benchmarks.common import DEFAULT_SETS, Timer, emit
 
-LIB = workload_library(include_archs=False)
-
-
-def cs_decomposition():
-    """Per-component cycles of one save+restore for each workload."""
-    rows = []
-    for name, prog in sorted(LIB.items()):
-        acc = GemminiRT()
-        p = TaskParams(tid=0, priority=0, period=1e9, deadline=1e9,
-                       c_lo=prog.total_cycles, c_hi=2 * prog.total_cycles,
-                       crit=Crit.LO, eta=1, workload=name)
-        tcb = TCB(params=p)
-        acc.note_execution(0, prog.total_cycles * 0.5, prog)
-        br = acc.context_save(tcb, drain_cycles=prog.max_instruction_cycles,
-                              next_eta=8)
-        rr = acc.context_restore(tcb)
-        rows.append((name, br.drain, br.accumulator, br.config_buffer,
-                     br.remap_block, br.scratchpad, br.total, rr.total))
-    return rows
+UTILS = (0.5, 0.7, 0.9)
+COLUMNS = ("workload", "drain", "accumulator", "config_buf", "remap_blk",
+           "scratchpad", "save_total", "restore_total")
 
 
-def main(full: bool = False):
+def cs_row(workload: str) -> dict:
+    """Engine point: per-component cycles of one save+restore."""
+    prog = cached_library("sim")[workload]
+    acc = GemminiRT()
+    p = TaskParams(tid=0, priority=0, period=1e9, deadline=1e9,
+                   c_lo=prog.total_cycles, c_hi=2 * prog.total_cycles,
+                   crit=Crit.LO, eta=1, workload=workload)
+    tcb = TCB(params=p)
+    acc.note_execution(0, prog.total_cycles * 0.5, prog)
+    br = acc.context_save(tcb, drain_cycles=prog.max_instruction_cycles,
+                          next_eta=8)
+    rr = acc.context_restore(tcb)
+    return {"workload": workload, "drain": br.drain,
+            "accumulator": br.accumulator, "config_buf": br.config_buffer,
+            "remap_blk": br.remap_block, "scratchpad": br.scratchpad,
+            "save_total": br.total, "restore_total": rr.total}
+
+
+def sweeps(full: bool = False):
     n_sets = max((1000 if full else DEFAULT_SETS) // 2, 30)
+    names = sorted(cached_library("sim"))
+    return (FuncSweep.over("tbl_overhead_cs",
+                           "benchmarks.tbl_overhead:cs_row",
+                           [{"workload": n} for n in names]),
+            Sweep(name="tbl_overhead", policies=(Policy.mesc(),),
+                  utils=UTILS, n_sets=n_sets))
+
+
+def main(full: bool = False, **campaign_kw):
+    cs_sweep, sim_sweep = sweeps(full)
+    n_sets = sim_sweep.n_sets
     with Timer() as t:
-        print("workload,drain,accumulator,config_buf,remap_blk,scratchpad,"
-              "save_total,restore_total")
-        for r in cs_decomposition():
-            print(",".join(str(x) for x in r))
+        cs_rows = Campaign(cs_sweep, **campaign_kw).collect()
+        print(",".join(COLUMNS))
+        for r in cs_rows:
+            print(",".join(str(r[c]) for c in COLUMNS))
+        cells = group_rows(Campaign(sim_sweep, **campaign_kw).collect(), "u")
         fracs = []
-        for u in (0.5, 0.7, 0.9):
-            ms = run_many(Policy.mesc(), n_sets=n_sets, u=u)
-            fr = [m.overhead_cycles / max(m.exec_cycles, 1) for m in ms]
+        for u in UTILS:
+            fr = [r["overhead_cycles"] / max(r["exec_cycles"], 1)
+                  for r in cells[(u,)]]
             fracs.append(np.mean(fr))
             print(f"overhead_fraction,u={u},{np.mean(fr):.4f}")
     worst = max(fracs)
-    emit("tbl_overhead", t.seconds * 1e6 / (3 * n_sets),
+    emit("tbl_overhead", t.seconds * 1e6 / (len(UTILS) * n_sets),
          f"overhead={worst * 100:.2f}%;claim=<5%;ok={worst < 0.05}")
     return {"overhead_fraction": worst}
 

@@ -1,0 +1,8 @@
+"""Compatibility shims for optional third-party dependencies.
+
+The repo's hard runtime dependencies are ``jax`` and ``numpy`` only
+(see pyproject.toml).  Everything else is gated: when an optional
+package is missing, a minimal fallback with the same surface is
+installed instead, so the tier-1 test suite collects and runs on a
+bare image.
+"""

@@ -15,8 +15,10 @@ from repro.core.program import Program, build_program, workload_library
 from repro.core.remapper import AddressRemapper
 from repro.core.executor import GemminiRT
 from repro.core.scheduler import Mode, Policy, pick_next
-from repro.core.simulator import MCSSimulator, RunMetrics, simulate
+from repro.core.simulator import (MCSSimulator, RunMetrics, simulate,
+                                  simulate_batch)
 from repro.core.task import Crit, Status, TCB, TaskParams
-from repro.core.taskgen import generate_taskset, uunifast
+from repro.core.taskgen import (generate_taskset, generate_taskset_batch,
+                                point_seed, uunifast)
 from repro.core.wcrt import AnalysisConstants, analyze, longest_instruction
 from repro.core.monitor import TaskMonitor

@@ -17,6 +17,13 @@ Implements the paper's runtime semantics on a virtual 100 MHz clock:
 Metrics recorded per run: pi/ci blocking intervals, save/restore cycle
 breakdowns, deadline misses per criticality, LO jobs released & completed
 in HI-mode (survivability), mode residency.
+
+Entry points: ``simulate`` runs one (taskset, seed) point;
+``simulate_batch`` runs a list of such points serially in-process.  Runs
+are fully independent — all randomness comes from the per-run
+``np.random.default_rng(seed)`` — which is what lets the campaign
+engine (``repro.experiments``) fan points out across worker processes
+and cache each point by content hash without changing any result.
 """
 from __future__ import annotations
 
@@ -30,6 +37,13 @@ from repro.core.executor import GemminiRT
 from repro.core.program import Program
 from repro.core.scheduler import Mode, Policy, pick_next
 from repro.core.task import Crit, Status, TCB, TaskParams
+
+# Fingerprint of the simulation semantics, baked into every campaign
+# cache key (repro.experiments.spec).  BUMP THIS whenever a change to
+# the simulator / scheduler / executor / taskgen alters any simulated
+# result — otherwise previously-cached campaign points silently go
+# stale and figures mix pre- and post-change rows.
+SIM_SEMANTICS_VERSION = 1
 
 
 @dataclasses.dataclass
@@ -314,3 +328,17 @@ class MCSSimulator:
 
 def simulate(tasks, programs, policy, **kw) -> RunMetrics:
     return MCSSimulator(tasks, programs, policy, **kw).run()
+
+
+def simulate_batch(tasksets, programs, policy, *, seeds,
+                   **kw) -> List[RunMetrics]:
+    """Batch entry point: one independent simulator per (taskset, seed).
+
+    ``seeds`` must align with ``tasksets``; pair this with
+    ``taskgen.generate_taskset_batch`` so taskset ``s`` and its run share
+    ``point_seed(seed0, s)`` — the engine's per-point seeding contract.
+    """
+    if len(tasksets) != len(seeds):
+        raise ValueError(f"{len(tasksets)} tasksets vs {len(seeds)} seeds")
+    return [MCSSimulator(tasks, programs, policy, seed=s, **kw).run()
+            for tasks, s in zip(tasksets, seeds)]

@@ -1,0 +1,30 @@
+"""Unified experiment-campaign engine (see docs/experiments.md).
+
+Declare a sweep, run it as a campaign, collect tidy rows:
+
+    from repro.core import Policy
+    from repro.experiments import Campaign, Sweep, group_rows, frac
+
+    sweep = Sweep(name="demo", policies=(Policy.mesc(),),
+                  utils=(0.7, 0.9), n_sets=50)
+    rows = Campaign(sweep).collect()          # parallel + cached
+    for (u,), cell in group_rows(rows, "u").items():
+        print(u, frac(cell, "success_all"))
+
+Points are content-hashed and cached on disk (``results/campaigns`` by
+default), so repeated or overlapping sweeps only simulate what is new.
+"""
+from repro.experiments.spec import (FuncPoint, FuncSweep, SimPoint, Sweep,
+                                    canonical_hash, canonical_json)
+from repro.experiments.cache import ResultCache, default_cache_dir
+from repro.experiments.runner import Campaign, default_workers, run_sweep
+from repro.experiments.metrics import (frac, group_rows, metrics_row,
+                                       pooled_mean, ratio_of_sums)
+
+__all__ = [
+    "Sweep", "FuncSweep", "SimPoint", "FuncPoint",
+    "canonical_hash", "canonical_json",
+    "ResultCache", "default_cache_dir",
+    "Campaign", "run_sweep", "default_workers",
+    "metrics_row", "group_rows", "pooled_mean", "frac", "ratio_of_sums",
+]

@@ -1,8 +1,25 @@
 import os
+import sys
+from pathlib import Path
 
 # tests must see the real (single) CPU device — the 512-device flag is only
 # for the dry-run (see src/repro/launch/dryrun.py)
 os.environ.pop("XLA_FLAGS", None)
+
+# make `repro` (src/) and `benchmarks` (repo root) importable regardless of
+# how pytest was invoked; mirrors pyproject's tool.pytest.ini_options
+_ROOT = Path(__file__).resolve().parents[1]
+for p in (str(_ROOT / "src"), str(_ROOT)):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+# gate the optional `hypothesis` dependency: on bare images fall back to the
+# deterministic shim so the property tests still collect and run
+try:
+    import hypothesis  # noqa: F401
+except ImportError:  # pragma: no cover - depends on image
+    from repro._compat import hypothesis_fallback
+    hypothesis_fallback.install()
 
 import jax  # noqa: E402
 

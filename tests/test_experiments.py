@@ -1,0 +1,158 @@
+"""Campaign engine: spec hashing, caching, parallelism, seeding.
+
+Tiny sweeps (short duration, few sets) keep each test fast while still
+exercising the full plan -> fan-out -> cache -> collect path.
+"""
+import dataclasses
+
+import pytest
+
+from repro.core import (Policy, generate_taskset, generate_taskset_batch,
+                        point_seed, simulate, simulate_batch)
+from repro.core.program import workload_library
+from repro.experiments import (Campaign, FuncSweep, Sweep, frac, group_rows,
+                               metrics_row, pooled_mean)
+
+TINY = dict(utils=(0.7,), n_sets=3, duration=2e6)
+
+
+def tiny_sweep(**kw):
+    merged = {**TINY, **kw}
+    return Sweep(name=merged.pop("name", "tiny"),
+                 policies=merged.pop("policies", (Policy.mesc(),)),
+                 **merged)
+
+
+class TestSpecHash:
+    def test_stable_across_instances(self):
+        assert tiny_sweep().spec_hash() == tiny_sweep().spec_hash()
+
+    def test_sensitive_to_every_axis(self):
+        base = tiny_sweep()
+        variants = [
+            tiny_sweep(utils=(0.8,)),
+            tiny_sweep(n_sets=4),
+            tiny_sweep(duration=3e6),
+            tiny_sweep(seed0=1),
+            tiny_sweep(overrun_prob=0.5),
+            tiny_sweep(policies=(Policy.non_preemptive(),)),
+        ]
+        hashes = {s.spec_hash() for s in [base] + variants}
+        assert len(hashes) == len(variants) + 1
+
+    def test_point_keys_content_addressed(self):
+        """Same point content -> same key, even from different sweeps."""
+        a = tiny_sweep(name="a").points()
+        b = tiny_sweep(name="b").points()
+        assert [p.key() for p in a] == [p.key() for p in b]
+        keys = {p.key() for p in a}
+        assert len(keys) == len(a)
+
+    def test_duplicate_policy_names_rejected(self):
+        with pytest.raises(ValueError):
+            tiny_sweep(policies=(Policy.mesc(),
+                                 Policy.mesc(use_banks=False)))
+
+
+class TestCache:
+    def test_hit_miss_and_row_identity(self, tmp_path):
+        sweep = tiny_sweep()
+        c1 = Campaign(sweep, cache_dir=tmp_path, workers=1)
+        rows1 = c1.collect()
+        assert c1.stats == {"hits": 0, "misses": 3}
+        c2 = Campaign(sweep, cache_dir=tmp_path, workers=1)
+        rows2 = c2.collect()
+        assert c2.stats == {"hits": 3, "misses": 0}
+        assert rows1 == rows2
+
+    def test_partial_overlap_is_incremental(self, tmp_path):
+        Campaign(tiny_sweep(), cache_dir=tmp_path, workers=1).run()
+        grown = tiny_sweep(n_sets=5)        # supersets the first 3 points
+        c = Campaign(grown, cache_dir=tmp_path, workers=1)
+        c.run()
+        assert c.stats == {"hits": 3, "misses": 2}
+
+    def test_manifest_written(self, tmp_path):
+        sweep = tiny_sweep()
+        c = Campaign(sweep, cache_dir=tmp_path, workers=1)
+        c.run()
+        m = c.cache.read_manifest(sweep.spec_hash())
+        assert m is not None
+        assert m["name"] == "tiny"
+        assert m["n_points"] == 3
+        assert len(m["point_keys"]) == 3
+
+    def test_no_cache_mode_writes_nothing(self, tmp_path):
+        c = Campaign(tiny_sweep(), cache_dir=tmp_path, use_cache=False,
+                     workers=1)
+        c.collect()
+        assert not any(tmp_path.iterdir())
+
+
+class TestParallel:
+    def test_parallel_equals_serial(self, tmp_path):
+        sweep = tiny_sweep(n_sets=4)
+        ser = Campaign(sweep, use_cache=False, workers=1).collect()
+        par = Campaign(sweep, use_cache=False, workers=2).collect()
+        assert ser == par
+
+    def test_func_sweep_fans_out(self, tmp_path):
+        fs = FuncSweep.over("echo", "repro.experiments.runner:_echo_point",
+                            [{"i": i} for i in range(4)])
+        rows = Campaign(fs, cache_dir=tmp_path, workers=2).collect()
+        assert [r["i"] for r in rows] == [0, 1, 2, 3]
+        assert all(r["echo"] for r in rows)
+
+
+class TestSeeding:
+    def test_point_seed_contract(self):
+        assert point_seed(7, 5) == 12
+        sweep = tiny_sweep(seed0=7)
+        assert [p.seed for p in sweep.points()] == [7, 8, 9]
+
+    def test_taskset_batch_matches_singles(self):
+        lib = {k: v for k, v in workload_library().items()}
+        batch = generate_taskset_batch(0.6, 3, seed0=4, programs=lib)
+        singles = [generate_taskset(0.6, seed=4 + s, programs=lib)
+                   for s in range(3)]
+        assert batch == singles
+
+    def test_simulate_batch_matches_singles(self):
+        lib = workload_library()
+        sets = generate_taskset_batch(0.6, 2, seed0=0, programs=lib)
+        batch = simulate_batch(sets, lib, Policy.mesc(), seeds=[0, 1],
+                               duration=2e6)
+        singles = [simulate(ts, lib, Policy.mesc(), seed=s, duration=2e6)
+                   for ts, s in zip(sets, [0, 1])]
+        assert batch == singles
+
+    def test_simulate_batch_length_mismatch(self):
+        with pytest.raises(ValueError):
+            simulate_batch([], {}, Policy.mesc(), seeds=[1])
+
+    def test_engine_matches_legacy_serial_loop(self, tmp_path):
+        """The acceptance property: engine rows == benchmarks.common
+        run_many (the pre-engine serial reference), policy by policy."""
+        from benchmarks.common import run_many
+        for policy in (Policy.mesc(), Policy.non_preemptive()):
+            sweep = tiny_sweep(policies=(policy,), duration=5e6)
+            rows = Campaign(sweep, use_cache=False, workers=2).collect()
+            legacy = run_many(policy, n_sets=3, u=0.7, duration=5e6)
+            expected = [metrics_row(m, policy=policy.name, u=0.7, gamma=0.5,
+                                    n_tasks=10, set_index=s, seed=s)
+                        for s, m in enumerate(legacy)]
+            assert rows == expected
+
+
+class TestAggregation:
+    def test_pooled_mean_matches_concatenated_lists(self):
+        rows = [{"pi_sum": 10.0, "pi_n": 2}, {"pi_sum": 5.0, "pi_n": 3}]
+        assert pooled_mean(rows, "pi") == pytest.approx(15.0 / 5)
+        assert pooled_mean([{"pi_sum": 0.0, "pi_n": 0}], "pi") == 0.0
+
+    def test_group_and_frac(self):
+        rows = [{"u": 0.5, "success_all": 1}, {"u": 0.5, "success_all": 0},
+                {"u": 0.9, "success_all": 0}]
+        cells = group_rows(rows, "u")
+        assert frac(cells[(0.5,)], "success_all") == 0.5
+        assert frac(cells[(0.9,)], "success_all") == 0.0
