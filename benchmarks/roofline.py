@@ -8,7 +8,7 @@ Per (arch x shape) cell on the 16x16 mesh:
 FLOPs/bytes per device come from the trip-count-corrected HLO text
 analysis (cross-validated against the unrolled single-device cost probe —
 agreement within ~1%; see runtime/hlo_analysis.py).  The memory term is an
-upper bound at CPU-XLA fusion granularity (DESIGN.md SS7).
+upper bound at CPU-XLA fusion granularity.
 
 MODEL_FLOPS = 6*N*D (train) / 2*N*D (prefill/decode), N = active params —
 the ratio against compiled FLOPs exposes remat/redundancy waste.

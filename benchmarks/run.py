@@ -41,7 +41,7 @@ def main() -> None:
                     help="paper-scale experiment sizes (1000 task sets)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset (fig2,fig6,fig7,fig8,"
-                         "fig9,fig10,overhead,roofline)")
+                         "fig9,fig10,fig11,overhead,roofline)")
     ap.add_argument("--workers", type=int, default=None,
                     help="worker processes per campaign "
                          "(default: CPU count / $REPRO_WORKERS)")
@@ -62,7 +62,8 @@ def main() -> None:
 
     from benchmarks import (fig2_instruction_costs, fig6_banks,
                             fig7_blocking, fig8_success, fig9_hi_success,
-                            fig10_survivability, tbl_overhead, roofline)
+                            fig10_survivability, fig11_multiacc,
+                            tbl_overhead, roofline)
     table = {
         "fig2": fig2_instruction_costs.main,
         "fig6": fig6_banks.main,
@@ -70,6 +71,7 @@ def main() -> None:
         "fig8": fig8_success.main,
         "fig9": fig9_hi_success.main,
         "fig10": fig10_survivability.main,
+        "fig11": fig11_multiacc.main,
         "overhead": tbl_overhead.main,
         "roofline": roofline.main,
     }

@@ -184,7 +184,7 @@ SHAPES_BY_NAME = {s.name: s for s in SHAPES}
 
 
 def supports_shape(arch: ArchConfig, shape: ShapeConfig) -> bool:
-    """long_500k needs sub-quadratic attention (see DESIGN.md)."""
+    """long_500k needs sub-quadratic attention."""
     if shape.name == "long_500k":
         return arch.sub_quadratic
     return True

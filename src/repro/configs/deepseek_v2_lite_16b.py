@@ -2,7 +2,7 @@
 
 [arXiv:2405.04434; hf] — 27L, d_model=2048, 16 heads, MLA kv_lora=512,
 2 shared + 64 routed experts top-6, expert FFN 1408, vocab 102400.
-(The pool line's "160 routed" is full-V2; Lite is 64 routed — see DESIGN.md.)
+(The pool line's "160 routed" is full-V2; Lite is 64 routed.)
 """
 from repro.configs.base import ArchConfig, MLAConfig, MoEConfig
 

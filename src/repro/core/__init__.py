@@ -7,18 +7,26 @@ The paper's contribution as a composable library:
   scheduler     — Alg. 1 + LO/transition/HI mode rules (+ NP/LP/AMC baselines)
   simulator     — cycle-level DES for the paper's experiments
   taskgen       — UUnifast task sets (SS VIII)
-  wcrt          — response-time analysis (Eqs. 1-11)
+  wcrt          — response-time analysis (Eqs. 1-11) + partitioned variant
   monitor       — TCB registry + LO-WCET timers (real-executor path)
+  platform      — N-instance accelerator pool, partition heuristics,
+                  LO migration-on-idle (multi-accelerator scale-out)
 """
 from repro.core.isa import Instruction, Op
 from repro.core.program import Program, build_program, workload_library
 from repro.core.remapper import AddressRemapper
 from repro.core.executor import GemminiRT
-from repro.core.scheduler import Mode, Policy, pick_next
-from repro.core.simulator import (MCSSimulator, RunMetrics, simulate,
-                                  simulate_batch)
+from repro.core.scheduler import (Mode, ModeCoordinator, Policy, pick_next,
+                                  update_mode)
+from repro.core.simulator import (MCSSimulator, MultiAccelSimulator,
+                                  MultiRunMetrics, RunMetrics, simulate,
+                                  simulate_batch, simulate_multi)
 from repro.core.task import Crit, Status, TCB, TaskParams
 from repro.core.taskgen import (generate_taskset, generate_taskset_batch,
                                 point_seed, uunifast)
-from repro.core.wcrt import AnalysisConstants, analyze, longest_instruction
+from repro.core.wcrt import (AnalysisConstants, PartitionedSchedulability,
+                             analyze, analyze_partitioned,
+                             longest_instruction)
+from repro.core.platform import (AcceleratorPool, Assignment,
+                                 MigrationPolicy, partition, utilization)
 from repro.core.monitor import TaskMonitor

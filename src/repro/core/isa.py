@@ -1,4 +1,4 @@
-"""Gemmini^RT instruction set (paper Tbl. I + base Gemmini ops).
+"""Gemmini^RT instruction set (paper SS V.A, Tbl. I + base Gemmini ops).
 
 The accelerator executes a *stream* of instructions.  Base ops mirror
 Gemmini (CONFIG_*, MVIN/MVOUT, PRELOAD, COMPUTE); the RT extensions are the

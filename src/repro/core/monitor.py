@@ -1,4 +1,4 @@
-"""Task monitor (paper SS VI.A): TCB registry + per-task LO-WCET timers.
+"""Task monitor (paper SS VI.B): TCB registry + per-task LO-WCET timers.
 
 In the discrete-event simulator the timer interrupt is the 'overrun' event;
 this module provides the standalone monitor used by the real executor path

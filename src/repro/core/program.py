@@ -1,4 +1,5 @@
-"""Workload -> instruction-stream compiler (+ cycle cost model).
+"""Workload -> instruction-stream compiler + cycle cost model (the
+SS V.A instruction streams the SS VIII workloads execute).
 
 A :class:`Program` is a sequence of :class:`Segment`s; each segment is a
 repeating instruction pattern (the tiled-GEMM inner loop), so cycle

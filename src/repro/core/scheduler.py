@@ -98,3 +98,52 @@ def update_mode(mode: Mode, tcbs: Dict[int, TCB], resident_lo: List[int],
     if mode != Mode.LO and not any_active:
         return Mode.LO            # system idle -> revert
     return mode
+
+
+# ----------------------------------------------------------------------
+# Multi-accelerator coordination (platform layer, see docs/scheduling.md)
+# ----------------------------------------------------------------------
+
+MODE_SEVERITY = {Mode.LO: 0, Mode.TRANS: 1, Mode.HI: 2}
+
+
+class ModeCoordinator:
+    """Per-instance mode machines + the platform-wide aggregate.
+
+    Partitioned MESC runs one SS IV mode machine *per accelerator
+    instance*: an overrun on instance ``i`` degrades only ``i``'s mode
+    (its LO-tasks yield, its resident-LO countdown runs), while other
+    instances keep serving their partitions in LO-mode.  The
+    coordinator tracks every instance's mode and exposes the platform
+    mode — the most severe per-instance mode — which gates global
+    decisions: LO-task migration targets must be in LO-mode, and
+    platform-level telemetry (mode residency, degraded-instance count)
+    reads from here.
+    """
+
+    def __init__(self, n_instances: int):
+        self.modes: List[Mode] = [Mode.LO] * n_instances
+
+    def set_mode(self, inst: int, mode: Mode) -> None:
+        self.modes[inst] = mode
+
+    def mode_of(self, inst: int) -> Mode:
+        return self.modes[inst]
+
+    def update_instance(self, inst: int, tcbs: Dict[int, TCB],
+                        resident_lo: List[int], any_active: bool) -> Mode:
+        """Run one instance's SS IV progression and record the result."""
+        self.modes[inst] = update_mode(self.modes[inst], tcbs,
+                                       resident_lo, any_active)
+        return self.modes[inst]
+
+    def platform_mode(self) -> Mode:
+        """Most severe mode across instances (LO < transition < HI)."""
+        return max(self.modes, key=MODE_SEVERITY.__getitem__)
+
+    def instances_in(self, mode: Mode) -> List[int]:
+        return [i for i, m in enumerate(self.modes) if m == mode]
+
+    def degraded(self) -> List[int]:
+        """Instances that have left LO-mode."""
+        return [i for i, m in enumerate(self.modes) if m != Mode.LO]

@@ -1,7 +1,7 @@
 """MESC-scheduled model serving: the paper's mechanism driving real JAX
 model execution.
 
-Mapping (the TPU adaptation of SS IV/V, see DESIGN.md):
+Mapping (the TPU adaptation of SS IV/V, see docs/design.md):
   * accelerator instruction  = one bounded-latency jitted dispatch
                                (one decode step / one prefill chunk)
   * scratchpad banks         = a bounded pool of device-resident KV-cache
@@ -15,6 +15,13 @@ Mapping (the TPU adaptation of SS IV/V, see DESIGN.md):
 Scheduling follows scheduler.Policy + mode rules: HI requests preempt LO
 requests at instruction (= decode-step) boundaries; LO requests are never
 dropped (imprecise-MCS stance), they run when no HI request is active.
+
+Multi-accelerator scale-out (docs/scheduling.md): :class:`MultiLaneServer`
+runs one :class:`MESCServer` dispatch lane per virtual accelerator, all
+lanes drawing KV-cache residency from one shared :class:`KVSlotArena`
+carved into per-lane quotas; requests are partitioned onto lanes with the
+same first-fit / worst-fit / criticality-aware heuristics as
+``core.platform.partition``.
 """
 from __future__ import annotations
 
@@ -55,44 +62,98 @@ class Request:
     saves: int = 0
 
 
+class KVSlotArena:
+    """Shared pool of device-resident KV-cache slots, carved into
+    per-lane quotas (the multi-lane analogue of the scratchpad banks).
+
+    Quotas statically partition the arena — ``sum(quotas) == total`` —
+    so each lane's admission check is local (no cross-lane eviction),
+    exactly like banklocked scratchpad banks partitioned across
+    accelerator instances.
+    """
+
+    def __init__(self, total_slots: int, n_lanes: int = 1,
+                 quotas: Optional[List[int]] = None):
+        if quotas is None:
+            base, rem = divmod(total_slots, n_lanes)
+            quotas = [base + (1 if i < rem else 0) for i in range(n_lanes)]
+        if len(quotas) != n_lanes or sum(quotas) != total_slots:
+            raise ValueError(f"quotas {quotas} must partition "
+                             f"{total_slots} slots over {n_lanes} lanes")
+        if min(quotas) < 1:
+            raise ValueError(f"every lane needs >= 1 slot, got {quotas}")
+        self.total_slots = total_slots
+        self.quotas = list(quotas)
+        self._held: List[set] = [set() for _ in range(n_lanes)]
+
+    def held(self, lane: int) -> int:
+        return len(self._held[lane])
+
+    def can_admit(self, lane: int) -> bool:
+        return self.held(lane) < self.quotas[lane]
+
+    def acquire(self, lane: int, rid: int) -> None:
+        if rid not in self._held[lane] and not self.can_admit(lane):
+            raise RuntimeError(f"lane {lane} over quota "
+                               f"({self.quotas[lane]} slots)")
+        self._held[lane].add(rid)
+
+    def release(self, lane: int, rid: int) -> None:
+        self._held[lane].discard(rid)
+
+
 class MESCServer:
     """Single-model mixed-criticality serving loop (batch size 1 per
-    request; the accelerator is the shared resource)."""
+    request; the accelerator — one dispatch lane — is the shared
+    resource).  Standalone it owns a private one-lane arena sized
+    ``resident_slots``; under :class:`MultiLaneServer` it is one lane of
+    a shared arena."""
 
     def __init__(self, cfg: ArchConfig, params, *, policy: Policy = None,
                  rc: RuntimeConfig = CPU_RC, max_len: int = 64,
-                 resident_slots: int = 2):
+                 resident_slots: int = 2,
+                 arena: Optional[KVSlotArena] = None, lane: int = 0,
+                 jit_fns=None):
         self.cfg = cfg
         self.params = params
         self.rc = rc
         self.policy = policy or Policy.mesc()
         self.max_len = max_len
-        self.resident_slots = resident_slots   # "banks"
+        self.arena = arena or KVSlotArena(resident_slots, 1)
+        self.lane = lane
         self.mode = Mode.LO
         self.requests: Dict[int, Request] = {}
         self.current: Optional[int] = None
-        self._decode = jax.jit(
-            lambda p, t, c: lm.decode_step(cfg, p, t, c, rc))
-        self._prefill = jax.jit(
-            lambda p, b: lm.prefill(cfg, p, b, rc, max_len=max_len))
+        if jit_fns is not None:            # shared across lanes
+            self._decode, self._prefill = jit_fns
+        else:
+            self._decode = jax.jit(
+                lambda p, t, c: lm.decode_step(cfg, p, t, c, rc))
+            self._prefill = jax.jit(
+                lambda p, b: lm.prefill(cfg, p, b, rc, max_len=max_len))
 
     # -- bank pool ----------------------------------------------------------
     def _resident(self) -> List[Request]:
         return [r for r in self.requests.values()
                 if r.resident and not r.done]
 
+    def _evict(self, victim: Request):
+        victim.cache = jax.device_get(victim.cache)       # step_wise_mvout
+        victim.resident = False
+        victim.saves += 1
+        self.arena.release(self.lane, victim.rid)
+
     def _make_room(self, incoming: Request):
         """Evict (context-save) lowest-priority resident request if the
-        bank pool is full — zero work when a slot is free (Obs. 1)."""
+        lane's quota is full — zero work when a slot is free (Obs. 1)."""
         res = [r for r in self._resident() if r.rid != incoming.rid]
-        while len(res) >= self.resident_slots:
+        while res and not self.arena.can_admit(self.lane):
             victim = max(res, key=lambda r: r.priority)
-            victim.cache = jax.device_get(victim.cache)   # step_wise_mvout
-            victim.resident = False
-            victim.saves += 1
+            self._evict(victim)
             res.remove(victim)
 
     def _restore(self, r: Request):
+        self.arena.acquire(self.lane, r.rid)
         if r.cache is None:
             _, r.cache = self._prefill(
                 self.params, {"tokens": jnp.asarray(r.prompt[None])})
@@ -177,6 +238,7 @@ class MESCServer:
             r.finished_at = time.monotonic()
             r.resident = False
             r.cache = None                 # flush banks
+            self.arena.release(self.lane, r.rid)
             self.current = None
         return r.rid
 
@@ -185,3 +247,100 @@ class MESCServer:
             if self.step() is None:
                 break
         return self.requests
+
+
+# ----------------------------------------------------------------------
+# Multi-accelerator serving: one dispatch lane per virtual accelerator
+# ----------------------------------------------------------------------
+
+class MultiLaneServer:
+    """Partitioned MESC serving over N virtual accelerator lanes.
+
+    Each lane is a full :class:`MESCServer` — its own SS IV mode
+    machine, preemption policy, and slice of the shared
+    :class:`KVSlotArena` — and all lanes share one pair of jitted
+    prefill/decode dispatch functions (compiled once).  Requests are
+    statically partitioned onto lanes at submit time with the platform
+    heuristics (``core.platform``): ``crit_aware`` spreads HI requests
+    round-robin and steers LO requests toward HI-light lanes,
+    ``worst_fit`` balances live-request counts, ``first_fit`` packs.
+    ``step()`` advances every lane by one instruction (= decode step),
+    so lanes progress in lockstep rounds; a HI request only ever
+    contends with its own lane's requests — the partitioned-blocking
+    win the multi-accelerator analysis (``wcrt.analyze_partitioned``)
+    quantifies.
+    """
+
+    def __init__(self, cfg: ArchConfig, params, *, n_lanes: int = 2,
+                 policy: Policy = None, rc: RuntimeConfig = CPU_RC,
+                 max_len: int = 64, total_slots: Optional[int] = None,
+                 heuristic: str = "crit_aware"):
+        from repro.core.platform import HEURISTICS
+        if heuristic not in HEURISTICS:
+            raise ValueError(f"unknown heuristic {heuristic!r}")
+        total_slots = total_slots if total_slots is not None else 2 * n_lanes
+        self.arena = KVSlotArena(total_slots, n_lanes)
+        self.heuristic = heuristic
+        decode = jax.jit(lambda p, t, c: lm.decode_step(cfg, p, t, c, rc))
+        prefill = jax.jit(
+            lambda p, b: lm.prefill(cfg, p, b, rc, max_len=max_len))
+        self.lanes: List[MESCServer] = [
+            MESCServer(cfg, params, policy=policy, rc=rc, max_len=max_len,
+                       arena=self.arena, lane=i, jit_fns=(decode, prefill))
+            for i in range(n_lanes)]
+        self.lane_of: Dict[int, int] = {}
+
+    # -- request -> lane partitioning ---------------------------------------
+    def _live(self, lane: MESCServer, crit: Optional[Crit] = None) -> int:
+        return sum(1 for r in lane.requests.values() if not r.done
+                   and (crit is None or r.crit == crit))
+
+    def _assign(self, r: Request) -> int:
+        n = len(self.lanes)
+        if self.heuristic == "first_fit":
+            return next((i for i in range(n)
+                         if self._live(self.lanes[i]) < self.arena.quotas[i]),
+                        min(range(n),
+                            key=lambda i: self._live(self.lanes[i])))
+        if self.heuristic == "worst_fit":
+            return min(range(n), key=lambda i: self._live(self.lanes[i]))
+        # crit_aware: spread HI (tiebreak on total load so a HI request
+        # lands on an idle lane, not behind running LO work); LO avoids
+        # HI-loaded lanes (x2 weight)
+        if r.crit == Crit.HI:
+            return min(range(n),
+                       key=lambda i: (self._live(self.lanes[i], Crit.HI),
+                                      self._live(self.lanes[i])))
+        return min(range(n),
+                   key=lambda i: self._live(self.lanes[i], Crit.LO)
+                   + 2 * self._live(self.lanes[i], Crit.HI))
+
+    def submit(self, r: Request) -> int:
+        lane = self._assign(r)
+        self.lane_of[r.rid] = lane
+        self.lanes[lane].submit(r)
+        return lane
+
+    # -- the serve loop -----------------------------------------------------
+    def step(self) -> List[Optional[int]]:
+        """One lockstep round: each lane runs one scheduler invocation
+        + one instruction.  Returns the rid that ran per lane."""
+        return [lane.step() for lane in self.lanes]
+
+    def run(self, max_steps: int = 10_000) -> Dict[int, Request]:
+        for _ in range(max_steps):
+            if all(r is None for r in self.step()):
+                break
+        return self.requests
+
+    @property
+    def requests(self) -> Dict[int, Request]:
+        out: Dict[int, Request] = {}
+        for lane in self.lanes:
+            out.update(lane.requests)
+        return out
+
+    def platform_mode(self) -> Mode:
+        from repro.core.scheduler import MODE_SEVERITY
+        return max((lane.mode for lane in self.lanes),
+                   key=MODE_SEVERITY.__getitem__)

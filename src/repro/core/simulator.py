@@ -1,4 +1,6 @@
-"""Cycle-level discrete-event simulation of MESC (and baselines).
+"""Cycle-level discrete-event simulation of MESC (and baselines): the
+runtime semantics of SS IV (scheduling/modes) + SS V (context-switch
+costs) driving the SS VIII experiments.
 
 Implements the paper's runtime semantics on a virtual 100 MHz clock:
 
@@ -19,7 +21,9 @@ breakdowns, deadline misses per criticality, LO jobs released & completed
 in HI-mode (survivability), mode residency.
 
 Entry points: ``simulate`` runs one (taskset, seed) point;
-``simulate_batch`` runs a list of such points serially in-process.  Runs
+``simulate_batch`` runs a list of such points serially in-process;
+``simulate_multi`` runs the partitioned multi-accelerator variant
+(``MultiAccelSimulator``, platform layer).  Runs
 are fully independent — all randomness comes from the per-run
 ``np.random.default_rng(seed)`` — which is what lets the campaign
 engine (``repro.experiments``) fan points out across worker processes
@@ -35,7 +39,8 @@ import numpy as np
 
 from repro.core.executor import GemminiRT
 from repro.core.program import Program
-from repro.core.scheduler import Mode, Policy, pick_next
+from repro.core.scheduler import (ACTIVE, Mode, Policy, pick_next,
+                                  update_mode)
 from repro.core.task import Crit, Status, TCB, TaskParams
 
 # Fingerprint of the simulation semantics, baked into every campaign
@@ -44,6 +49,14 @@ from repro.core.task import Crit, Status, TCB, TaskParams
 # result — otherwise previously-cached campaign points silently go
 # stale and figures mix pre- and post-change rows.
 SIM_SEMANTICS_VERSION = 1
+
+# Same contract for the multi-accelerator path (MultiAccelSimulator /
+# platform / migration): multi-instance sweeps salt their cache keys
+# with this so multi semantics can evolve without invalidating the
+# single-instance campaign cache.  v5 = job-scoped migration, HI-slack
+# admission guard, migration retry + idle-wake ticks, un-double-counted
+# overhead.
+MULTI_SIM_SEMANTICS_VERSION = 5
 
 
 @dataclasses.dataclass
@@ -328,6 +341,485 @@ class MCSSimulator:
 
 def simulate(tasks, programs, policy, **kw) -> RunMetrics:
     return MCSSimulator(tasks, programs, policy, **kw).run()
+
+
+# ======================================================================
+# Multi-accelerator partitioned simulation (platform layer)
+# ======================================================================
+
+@dataclasses.dataclass
+class MultiRunMetrics:
+    """Per-instance RunMetrics plus the platform-global counters."""
+    per_instance: List[RunMetrics]
+    migrations: int = 0
+    migration_cycles: float = 0.0
+    dma_contention_cycles: float = 0.0
+
+    @property
+    def n_instances(self) -> int:
+        return len(self.per_instance)
+
+    def merged(self) -> RunMetrics:
+        """Sum the per-instance metrics into one platform-wide view."""
+        out = RunMetrics()
+        for m in self.per_instance:
+            out.pi_blocking += m.pi_blocking
+            out.ci_blocking += m.ci_blocking
+            out.save_cycles += m.save_cycles
+            out.restore_cycles += m.restore_cycles
+            for k in out.jobs:
+                out.jobs[k] += m.jobs[k]
+                out.done[k] += m.done[k]
+                out.misses[k] += m.misses[k]
+            for k in out.misses_by_mode:
+                out.misses_by_mode[k] += m.misses_by_mode[k]
+            for k in out.mode_cycles:
+                out.mode_cycles[k] += m.mode_cycles[k]
+            out.lo_released_in_hi += m.lo_released_in_hi
+            out.lo_done_in_hi += m.lo_done_in_hi
+            out.cs_count += m.cs_count
+            out.exec_cycles += m.exec_cycles
+            # migration + DMA-contention cycles are already part of the
+            # per-instance overhead (charged at dispatch time); the
+            # standalone counters below just break them out
+            out.overhead_cycles += m.overhead_cycles
+        return out
+
+    def success(self, scope: str = "all") -> bool:
+        return self.merged().success(scope)
+
+    def survivability(self) -> float:
+        return self.merged().survivability()
+
+
+@dataclasses.dataclass
+class _InstState:
+    """Mutable per-instance runtime state of the multi-accel loop."""
+    running: Optional[int] = None
+    accel_free_at: float = 0.0
+    run_started: float = 0.0
+    last_mode_stamp: float = 0.0
+    metrics: RunMetrics = dataclasses.field(default_factory=RunMetrics)
+
+
+class MultiAccelSimulator:
+    """Partitioned MESC over N virtual Gemmini^RT instances.
+
+    Tasks are statically partitioned onto instances
+    (``core.platform.partition``); each instance runs the single-
+    accelerator MESC semantics — its own SS IV mode machine, bank
+    remapper and preemption policy — under one global event clock.  Two
+    cross-instance couplings make N instances more than N independent
+    simulators:
+
+      * **shared DMA**: all instances save/restore context over one
+        DRAM path, so a context switch that overlaps ``k`` concurrent
+        switches on other instances is stretched ``(1+k)x`` (equal
+        bandwidth share), the extra cycles accounted in
+        ``dma_contention_cycles``;
+      * **LO migration-on-idle**: an instance that goes idle in LO-mode
+        pulls the highest-priority waiting LO-task from a busy
+        instance, paying the context-shipping DMA cost
+        (``platform.MigrationPolicy``).
+
+    ``n_instances=1`` degenerates to the single-accelerator semantics
+    of :class:`MCSSimulator` — same rng contract, same event order, so
+    identical metrics (pinned by ``tests/test_platform.py::
+    TestMultiAccelSimulator::test_single_instance_matches_single_simulator``).
+    """
+
+    def __init__(self, tasks: List[TaskParams], programs: Dict[str, Program],
+                 policy: Policy, *, n_instances: int = 2,
+                 heuristic: str = "crit_aware",
+                 duration: float = 2e7, seed: int = 0,
+                 overrun_prob: float = 0.3, cf: float = 2.0,
+                 dma_contention: bool = True,
+                 migration=None):
+        from repro.core.platform import AcceleratorPool, MigrationPolicy
+        self.params = {t.tid: t for t in tasks}
+        self.programs = programs
+        self.policy = policy
+        self.duration = duration
+        self.rng = np.random.default_rng(seed)
+        self.overrun_prob = overrun_prob
+        self.cf = cf
+        self.dma_contention = dma_contention
+        self.pool = AcceleratorPool(
+            n_instances, use_remapper=policy.use_banks, heuristic=heuristic,
+            migration=migration or MigrationPolicy())
+        self.assignment = self.pool.assign(tasks)
+        from repro.core.scheduler import ModeCoordinator
+        self.coordinator = ModeCoordinator(n_instances)
+        self.tcbs: Dict[int, TCB] = {t.tid: TCB(params=t) for t in tasks}
+        self.insts = [_InstState() for _ in range(n_instances)]
+        self.multi = MultiRunMetrics(
+            per_instance=[s.metrics for s in self.insts])
+        self.now = 0.0
+        self.demand: Dict[int, float] = {}
+        self._events: List = []      # (time, seq, kind, tid-or-inst)
+        self._seq = 0
+        self._last_migration: Dict[int, float] = {}
+        self._migration_retry_at: Optional[float] = None
+
+    # ------------------------------------------------------------------
+    def _push(self, t: float, kind: str, key: int = -1):
+        self._seq += 1
+        heapq.heappush(self._events, (t, self._seq, kind, key))
+
+    def _program(self, tid: int) -> Program:
+        return self.programs[self.params[tid].workload]
+
+    def _sample_demand(self, p: TaskParams) -> float:
+        if p.crit == Crit.HI and self.rng.random() < self.overrun_prob:
+            return p.c_lo * self.rng.uniform(1.0, self.cf)
+        return p.c_lo * self.rng.uniform(0.7, 1.0)
+
+    def _next_tick(self, t: float) -> float:
+        return (int(t // self.policy.t_sr) + 1) * self.policy.t_sr
+
+    def _inst_of(self, tid: int) -> int:
+        return self.assignment.instance_of(tid)
+
+    def _inst_tcbs(self, inst: int) -> Dict[int, TCB]:
+        return {tid: tcb for tid, tcb in self.tcbs.items()
+                if self._inst_of(tid) == inst}
+
+    # ------------------------------------------------------------------
+    def _advance_running(self, inst: int):
+        st = self.insts[inst]
+        if st.running is None:
+            return
+        tcb = self.tcbs[st.running]
+        elapsed = self.now - st.run_started
+        if elapsed <= 0:
+            return
+        tcb.exec_cycles += elapsed
+        st.metrics.exec_cycles += elapsed
+        self.pool.instances[inst].note_execution(
+            tcb.tid, elapsed, self._program(tcb.tid))
+        st.run_started = self.now
+
+    def _set_mode(self, inst: int, mode: Mode):
+        st = self.insts[inst]
+        cur = self.coordinator.mode_of(inst)
+        if mode is not cur:
+            st.metrics.mode_cycles[cur.value] += \
+                self.now - st.last_mode_stamp
+            st.last_mode_stamp = self.now
+            self.coordinator.set_mode(inst, mode)
+
+    def _mode_tick(self, inst: int) -> Dict[int, TCB]:
+        """Run the instance's SS IV progression; returns the instance's
+        TCB view so the caller's scheduling pass can reuse it."""
+        accel = self.pool.instances[inst]
+        resident_lo = [t for t in accel.remapper.resident_tasks()
+                       if self.params.get(t) is not None
+                       and self.params[t].crit == Crit.LO]
+        tcbs = self._inst_tcbs(inst)
+        any_active = any(t.status in ACTIVE for t in tcbs.values())
+        # one shared copy of the SS IV progression (scheduler.update_mode)
+        self._set_mode(inst, update_mode(self.coordinator.mode_of(inst),
+                                         tcbs, resident_lo, any_active))
+        return tcbs
+
+    # ------------------------------------------------------------------
+    def _finish_job(self, inst: int, tcb: TCB):
+        st = self.insts[inst]
+        tcb.status = Status.PENDING
+        crit = tcb.params.crit.value
+        st.metrics.done[crit] += 1
+        if tcb.job_release >= 0 and self.now > tcb.job_deadline:
+            st.metrics.misses[crit] += 1
+            st.metrics.misses_by_mode[
+                self.coordinator.mode_of(inst).value] += 1
+        if getattr(tcb, "released_in_hi", False) \
+                and self.now <= tcb.job_deadline:
+            st.metrics.lo_done_in_hi += 1
+        st.metrics.overhead_cycles += self.pool.instances[inst].evict(tcb.tid)
+        tcb.data_in_accel = False
+        self.demand.pop(tcb.tid, None)
+        # job-scoped migration: the context is discarded with the job,
+        # so the task snaps back to its static partition for free
+        if self.assignment.instance_of(tcb.tid) \
+                != self.assignment.home_of(tcb.tid):
+            self.assignment.return_home(tcb.tid)
+
+    def _record_unblock(self, inst: int, tcb: TCB,
+                        at: Optional[float] = None):
+        st = self.insts[inst]
+        if tcb.blocked_since is not None:
+            dt = (at if at is not None else self.now) - tcb.blocked_since
+            cause = tcb.blocking_cause
+            if cause == "ci?" and self.coordinator.mode_of(inst) != Mode.LO:
+                cause = "ci"
+            if dt > 0:
+                (st.metrics.ci_blocking if cause == "ci"
+                 else st.metrics.pi_blocking).append(dt)
+            tcb.blocked_since = None
+            tcb.blocking_cause = None
+
+    def _mark_blocked(self, inst: int, tcb: TCB):
+        st = self.insts[inst]
+        if tcb.blocked_since is None:
+            tcb.blocked_since = self.now
+            run = self.tcbs.get(st.running) if st.running is not None else None
+            if (tcb.params.crit == Crit.HI and run is not None
+                    and run.params.crit == Crit.LO):
+                cause = "ci" if self.coordinator.mode_of(inst) != Mode.LO \
+                    else "ci?"
+                tcb.blocking_cause = cause
+            else:
+                tcb.blocking_cause = "pi"
+
+    # ------------------------------------------------------------------
+    def _concurrent_switches(self, inst: int) -> int:
+        """Instances other than ``inst`` mid-context-switch right now —
+        they hold a share of the single DMA path."""
+        return sum(1 for i, st in enumerate(self.insts)
+                   if i != inst and st.accel_free_at > self.now)
+
+    def _dispatch(self, inst: int, nxt: TCB, extra_cost: float = 0.0):
+        """Context switch on one instance (Alg. 1) with shared-DMA
+        contention stretching and optional migration cycles."""
+        st = self.insts[inst]
+        accel = self.pool.instances[inst]
+        cur = self.tcbs.get(st.running) if st.running is not None else None
+        switch_cost = extra_cost
+        if cur is not None and cur.tid != nxt.tid:
+            prog = self._program(cur.tid)
+            if self.policy.preemption == "instruction":
+                boundary = prog.next_instruction_boundary(cur.exec_cycles)
+            else:
+                boundary = prog.next_operator_boundary(cur.exec_cycles)
+            drain = max(0.0, min(boundary, self.demand[cur.tid])
+                        - cur.exec_cycles)
+            cur.exec_cycles += drain
+            next_eta = nxt.params.eta if self.policy.use_banks else None
+            br = accel.context_save(cur, int(drain), next_eta=next_eta)
+            if (self.coordinator.mode_of(inst) == Mode.HI
+                    and cur.params.crit == Crit.LO
+                    and nxt.params.crit == Crit.LO):
+                accel.remapper.release(cur.tid)
+                cur.data_in_accel = False
+            cur.status = Status.INTERRUPTED
+            switch_cost += br.total
+            st.metrics.save_cycles.append(br.total)
+            st.metrics.cs_count += 1
+        if nxt.pc > 0 or nxt.status == Status.INTERRUPTED:
+            br = accel.context_restore(nxt)
+            switch_cost += br.total
+            st.metrics.restore_cycles.append(br.total)
+        if self.dma_contention and switch_cost > 0:
+            stretch = switch_cost * self._concurrent_switches(inst)
+            switch_cost += stretch
+            self.multi.dma_contention_cycles += stretch
+        st.metrics.overhead_cycles += switch_cost
+        st.running = nxt.tid
+        nxt.status = Status.RUNNING
+        nxt.pc = 1
+        self._record_unblock(inst, nxt, at=self.now + switch_cost)
+        st.run_started = self.now + switch_cost
+        st.accel_free_at = self.now + switch_cost
+        rem = self.demand[nxt.tid] - nxt.exec_cycles
+        self._push(st.run_started + rem, "finish", nxt.tid)
+        p = nxt.params
+        if (p.crit == Crit.HI and not nxt.budget_overrun
+                and nxt.exec_cycles < p.c_lo):
+            self._push(st.run_started + (p.c_lo - nxt.exec_cycles),
+                       "overrun", nxt.tid)
+
+    def _try_migrate_to(self, inst: int):
+        """Pull the highest-priority waiting LO-task from a busy
+        instance onto idle instance ``inst`` (migration-on-idle).
+        Returns ``(tcb, ship_cycles)`` or ``None``; a candidate
+        rejected only on timing grounds (min_wait / cooldown) leaves a
+        retry time in ``self._migration_retry_at`` so the idle
+        instance re-checks instead of sleeping past the window."""
+        self._migration_retry_at = None
+        mig = self.pool.migration
+        if not mig.enabled:
+            return None
+        if mig.lo_mode_only \
+                and self.coordinator.mode_of(inst) != Mode.LO:
+            return None
+        candidates = []
+        retry_at = None
+        for tid, tcb in self.tcbs.items():
+            home = self._inst_of(tid)
+            if home == inst or tcb.params.crit != Crit.LO:
+                continue
+            if tcb.status not in (Status.READY, Status.INTERRUPTED):
+                continue
+            if self.insts[home].running == tid:
+                continue
+            if self.insts[home].running is None:
+                continue        # home instance is idle: it will run it
+            eligible_at = max(
+                tcb.job_release + mig.min_wait,
+                self._last_migration.get(tid, -1e18) + mig.cooldown)
+            if self.now < eligible_at:
+                retry_at = eligible_at if retry_at is None \
+                    else min(retry_at, eligible_at)
+                continue        # home may pick it up sooner; re-check
+            candidates.append(tcb)
+        if mig.hi_slack_guard and candidates:
+            from repro.core.isa import (ACCUM_BYTES, BANK_BYTES,
+                                        DMA_BYTES_PER_CYCLE)
+            stretch = self.pool.n_instances if self.dma_contention else 1
+            hi_params = [t.params for t in self._inst_tcbs(inst).values()
+                         if t.params.crit == Crit.HI]
+
+            def preempt_cost(c: TCB) -> float:
+                # worst case to get the migrant out of a HI-task's way:
+                # the HI release can land mid-restore (ship + mvin, the
+                # switch is atomic), then drain one instruction and
+                # save the full working set (eta banks + accumulator)
+                # back out — 4 full-working-set DMA passes, every cycle
+                # stretched by full cross-instance contention
+                bytes_wc = c.params.eta * BANK_BYTES + ACCUM_BYTES
+                return (self._program(c.tid).max_instruction_cycles
+                        + stretch * 4.0 * bytes_wc / DMA_BYTES_PER_CYCLE)
+
+            candidates = [
+                c for c in candidates
+                if all(h.deadline - h.c_hi
+                       > mig.slack_margin * preempt_cost(c)
+                       for h in hi_params)]
+        if not candidates:
+            # timing-rejected tasks may become eligible later even when
+            # the slack guard emptied the list — keep the retry time
+            self._migration_retry_at = retry_at
+            return None
+        best = min(candidates, key=lambda t: t.params.priority)
+        self._last_migration[best.tid] = self.now
+        cycles = self.pool.migrate(best.tid, inst)
+        self.multi.migrations = self.pool.migrations
+        self.multi.migration_cycles += cycles
+        return best, cycles
+
+    def _schedule(self, inst: int):
+        st = self.insts[inst]
+        if self.now < st.accel_free_at:       # CS in progress
+            self._push(self._next_tick(st.accel_free_at), "tick", inst)
+            return
+        self._advance_running(inst)
+        tcbs = self._mode_tick(inst)
+        accel = self.pool.instances[inst]
+        resident = accel.remapper.resident_tasks()
+        mode = self.coordinator.mode_of(inst)
+        nxt = pick_next(tcbs, mode, resident, self.policy)
+        cur = self.tcbs.get(st.running) if st.running is not None else None
+        if cur is not None and cur.status != Status.RUNNING:
+            cur = None
+            st.running = None
+        if nxt is None and cur is None:
+            migrated = self._try_migrate_to(inst)
+            if migrated is not None:
+                tcb, ship_cycles = migrated
+                self._dispatch(inst, tcb, extra_cost=ship_cycles)
+            elif self._migration_retry_at is not None:
+                # a candidate becomes timing-eligible later: re-check
+                # then instead of sleeping until this instance's next
+                # own release
+                self._push(self._next_tick(self._migration_retry_at),
+                           "tick", inst)
+            return
+        if nxt is None:
+            return
+        if cur is not None and nxt.tid == cur.tid:
+            return
+        if cur is not None and self.policy.preemption == "none":
+            self._mark_blocked(inst, nxt)
+            return
+        if cur is not None:
+            self._mark_blocked(inst, nxt)
+        self._dispatch(inst, nxt)
+
+    # ------------------------------------------------------------------
+    def run(self) -> MultiRunMetrics:
+        for tid, p in self.params.items():
+            phase = self.rng.uniform(0, p.period)
+            self._push(phase, "release", tid)
+        while self._events:
+            t, _, kind, key = heapq.heappop(self._events)
+            if t > self.duration:
+                break
+            self.now = t
+            if kind == "release":
+                tid = key
+                inst = self._inst_of(tid)
+                st = self.insts[inst]
+                tcb = self.tcbs[tid]
+                p = tcb.params
+                self._push(t + p.period, "release", tid)
+                if tcb.status != Status.PENDING:
+                    if tcb.job_deadline != float("inf"):
+                        st.metrics.misses[p.crit.value] += 1
+                        st.metrics.misses_by_mode[
+                            self.coordinator.mode_of(inst).value] += 1
+                        tcb.job_deadline = float("inf")
+                    continue
+                mode = self.coordinator.mode_of(inst)
+                if self.policy.drop_lo_in_hi and p.crit == Crit.LO \
+                        and mode != Mode.LO:
+                    continue
+                tcb.release(t)
+                self.demand[tid] = self._sample_demand(p)
+                st.metrics.jobs[p.crit.value] += 1
+                tcb.released_in_hi = (p.crit == Crit.LO and mode != Mode.LO)
+                if tcb.released_in_hi:
+                    st.metrics.lo_released_in_hi += 1
+                self._push(self._next_tick(t), "tick", inst)
+                # wake idle instances: their scheduler pass may pull
+                # this (or another waiting) LO-task via migration-on-
+                # idle — without this an instance whose own partition
+                # is quiet never re-checks
+                for other, ost in enumerate(self.insts):
+                    if other != inst and ost.running is None:
+                        self._push(self._next_tick(t), "tick", other)
+            elif kind == "finish":
+                tid = key
+                inst = self._inst_of(tid)
+                st = self.insts[inst]
+                tcb = self.tcbs[tid]
+                if st.running == tid and tcb.status == Status.RUNNING:
+                    self._advance_running(inst)
+                    if tcb.exec_cycles >= self.demand.get(
+                            tid, float("inf")) - 1e-6:
+                        self._finish_job(inst, tcb)
+                        st.running = None
+                        self._schedule(inst)
+            elif kind == "overrun":
+                tid = key
+                inst = self._inst_of(tid)
+                st = self.insts[inst]
+                tcb = self.tcbs[tid]
+                if st.running == tid and tcb.status == Status.RUNNING:
+                    self._advance_running(inst)
+                    if tcb.exec_cycles >= tcb.params.c_lo - 1e-6 \
+                            and not tcb.budget_overrun:
+                        tcb.budget_overrun = True
+                        if self.coordinator.mode_of(inst) == Mode.LO:
+                            self._set_mode(inst, Mode.TRANS)
+                        self._schedule(inst)
+            elif kind == "tick":
+                self._schedule(key)
+        # tail accounting
+        for inst, st in enumerate(self.insts):
+            st.metrics.mode_cycles[
+                self.coordinator.mode_of(inst).value] += \
+                self.duration - st.last_mode_stamp
+        for tcb in self.tcbs.values():
+            if tcb.status != Status.PENDING \
+                    and self.duration > tcb.job_deadline:
+                inst = self._inst_of(tcb.tid)
+                self.insts[inst].metrics.misses[tcb.params.crit.value] += 1
+        return self.multi
+
+
+def simulate_multi(tasks, programs, policy, **kw) -> MultiRunMetrics:
+    """One partitioned multi-accelerator run (platform layer)."""
+    return MultiAccelSimulator(tasks, programs, policy, **kw).run()
 
 
 def simulate_batch(tasksets, programs, policy, *, seeds,

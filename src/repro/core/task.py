@@ -1,9 +1,10 @@
-"""Task model and Task Control Block (paper SS VII.A, SS VI.A).
+"""Task model and Task Control Block (paper SS VI.A).
 
 Each sporadic task tau_i = (P_i, T_i, D_i, C_i^LO, C_i^HI, L_i, eta_i).
 The TCB extends it with runtime state: program counter into the
 instruction stream, data locations (accelerator banks vs DRAM addresses),
-timers and status — exactly the fields the paper's monitor tracks.
+timers and status — exactly the fields the paper's monitor (SS VI.B)
+tracks.
 """
 from __future__ import annotations
 

@@ -37,6 +37,22 @@ def uunifast(n: int, total_u: float, rng: np.random.Generator) -> np.ndarray:
     return u
 
 
+def uunifast_discard(n: int, total_u: float, rng: np.random.Generator,
+                     max_u: float = 1.0, max_tries: int = 10_000
+                     ) -> np.ndarray:
+    """UUnifast-Discard (Davis & Burns): redraw until every per-task
+    share is <= ``max_u``.  Required for multiprocessor/partitioned
+    totals (total_u > 1), where plain UUnifast can emit a single task
+    no instance could ever host — e.g. a HI-task with u_lo > 1/CF can
+    miss its own implicit deadline on an idle accelerator."""
+    for _ in range(max_tries):
+        u = uunifast(n, total_u, rng)
+        if u.max() <= max_u:
+            return u
+    raise ValueError(f"no {n}-task UUnifast draw with total {total_u} "
+                     f"fits max_u={max_u} after {max_tries} tries")
+
+
 def eta_for(program: Program) -> int:
     """Minimal banks preserving full speed (SS VII.C, Fig. 6 analogue):
     working set rounded up to banks, capped at the scratchpad."""
@@ -54,13 +70,21 @@ def generate_taskset(total_u: float, *, n_tasks: int = 10,
                      seed: int = 0,
                      programs: Optional[Dict[str, Program]] = None,
                      workload_names: Optional[Sequence[str]] = None,
+                     max_task_u: Optional[float] = None,
                      ) -> List[TaskParams]:
+    """One UUnifast task set (``max_task_u`` switches to the discard
+    variant — use it whenever ``total_u`` targets a multi-instance
+    platform; ``None`` keeps the legacy single-accelerator draws and
+    their campaign-cache results byte-identical)."""
     rng = np.random.default_rng(seed)
     programs = programs or workload_library()
     names = list(workload_names or
                  [n for n in programs
                   if programs[n].total_cycles < 2e7])  # keep periods tractable
-    u = uunifast(n_tasks, total_u, rng)
+    if max_task_u is None:
+        u = uunifast(n_tasks, total_u, rng)
+    else:
+        u = uunifast_discard(n_tasks, total_u, rng, max_u=max_task_u)
     chosen = rng.choice(names, size=n_tasks)
     n_hi = int(round(gamma * n_tasks))
     crits = np.array([Crit.HI] * n_hi + [Crit.LO] * (n_tasks - n_hi))

@@ -1,4 +1,5 @@
-"""On-disk result cache for campaign points.
+"""On-disk result cache for campaign points (SS VIII runs, keyed by
+content hash).
 
 Layout (under the cache root, default ``results/campaigns``)::
 

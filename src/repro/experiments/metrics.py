@@ -1,4 +1,5 @@
-"""Tidy per-point metric rows and cross-point aggregation helpers.
+"""Tidy per-point metric rows and cross-point aggregation helpers (the
+SS VIII figures' statistics, exact under re-grouping).
 
 The simulator returns a :class:`repro.core.simulator.RunMetrics` full of
 per-event lists; the cache and the figure reports want flat, JSON-able

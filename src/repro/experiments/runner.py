@@ -1,4 +1,5 @@
-"""Campaign runner: fan sweep points out across worker processes.
+"""Campaign runner: fan sweep points (SS VIII experiment units) out
+across worker processes.
 
 Each point of a :class:`~repro.experiments.spec.Sweep` is one
 independent DES run (the simulator is embarrassingly parallel per

@@ -1,4 +1,5 @@
-"""Declarative sweep specifications for the campaign engine.
+"""Declarative sweep specifications for the campaign engine (the
+SS VIII experimental campaigns as data).
 
 A *sweep* is the unit the engine plans: a grid of independent *points*,
 each of which is one unit of work a worker process can execute on its

@@ -189,7 +189,7 @@ def cost_probe(arch_name: str, shape_name: str) -> dict:
 
     Uses lowered.cost_analysis() (no compile); flash attention runs
     single-block so no inner loops hide FLOPs.  Cross-check for the
-    compiled-text analysis (see DESIGN.md roofline methodology).
+    compiled-text analysis (roofline methodology: benchmarks/roofline.py).
     """
     import dataclasses
     cfg = get_config(arch_name)
@@ -286,8 +286,7 @@ def main():
             if supports_shape(ARCHS[a], SHAPES_BY_NAME[s]):
                 cells.append((a, s))
             else:
-                print(f"SKIP {a} x {s} (needs sub-quadratic attention; "
-                      f"see DESIGN.md)")
+                print(f"SKIP {a} x {s} (needs sub-quadratic attention)")
 
     for a, s in cells:
         tag = f"{a}__{s}__{'pod2' if args.multi_pod else 'pod1'}"

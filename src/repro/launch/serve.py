@@ -3,9 +3,13 @@
 Serves a small model with batched requests of mixed priority/criticality
 under the MESC scheduler (instruction-level = decode-step preemption,
 bank-pool cache residency, LO-budget mode switching), and compares
-against a non-preemptive (FIFO/run-to-completion) baseline.
+against a non-preemptive (FIFO/run-to-completion) baseline.  With
+``--lanes N`` the requests are partitioned across N virtual accelerator
+dispatch lanes sharing one KV-slot arena (``core.serving.MultiLaneServer``,
+see docs/scheduling.md).
 
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b-smoke
+  PYTHONPATH=src python -m repro.launch.serve --lanes 2 --heuristic crit_aware
 """
 from __future__ import annotations
 
@@ -16,7 +20,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core.scheduler import Policy
-from repro.core.serving import MESCServer, Request
+from repro.core.serving import MESCServer, MultiLaneServer, Request
 from repro.core.task import Crit
 from repro.models import lm
 from repro.models.common import CPU_RC
@@ -41,16 +45,22 @@ def make_requests(cfg, rng, n_lo: int = 4, n_hi: int = 2,
     return reqs
 
 
-def run(cfg, params, policy, reqs, hi_delay_steps: int = 3):
+def run(cfg, params, policy, reqs, hi_delay_steps: int = 3,
+        lanes: int = 1, heuristic: str = "crit_aware"):
     """LO requests submitted first; HI requests arrive mid-flight."""
-    srv = MESCServer(cfg, params, policy=policy, max_len=64)
+    if lanes > 1:
+        srv = MultiLaneServer(cfg, params, policy=policy, max_len=64,
+                              n_lanes=lanes, heuristic=heuristic)
+    else:
+        srv = MESCServer(cfg, params, policy=policy, max_len=64)
     # warmup: compile prefill+decode outside the measured window
     warm = Request(rid=-1, priority=99,
                    prompt=np.zeros(8, np.int32), max_new_tokens=2,
                    crit=Crit.LO)
     srv.submit(warm)
     srv.run()
-    srv.requests.clear()
+    for ln in getattr(srv, "lanes", [srv]):
+        ln.requests.clear()
     lo = [r for r in reqs if r.crit == Crit.LO]
     hi = [r for r in reqs if r.crit == Crit.HI]
     for r in lo:
@@ -81,18 +91,25 @@ def summarize(name, reqs):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinyllama-1.1b-smoke")
+    ap.add_argument("--lanes", type=int, default=1,
+                    help="virtual accelerator dispatch lanes (partitioned "
+                         "MESC when > 1)")
+    ap.add_argument("--heuristic", default="crit_aware",
+                    choices=("first_fit", "worst_fit", "crit_aware"),
+                    help="request -> lane partition heuristic")
     args = ap.parse_args()
     cfg = get_config(args.arch)
     params = lm.init_params(cfg, jax.random.PRNGKey(0), CPU_RC)
     rng = np.random.default_rng(0)
 
-    print("MESC (instruction-level preemption):")
+    lane_kw = dict(lanes=args.lanes, heuristic=args.heuristic)
+    print(f"MESC (instruction-level preemption, lanes={args.lanes}):")
     mesc = summarize("mesc", run(cfg, params, Policy.mesc(),
-                                 make_requests(cfg, rng)))
+                                 make_requests(cfg, rng), **lane_kw))
     print("non-preemptive baseline:")
     rng = np.random.default_rng(0)
     base = summarize("np", run(cfg, params, Policy.non_preemptive(),
-                               make_requests(cfg, rng)))
+                               make_requests(cfg, rng), **lane_kw))
     if "HI" in mesc and "HI" in base:
         sp = base["HI"][0] / max(mesc["HI"][0], 1e-9)
         print(f"HI time-to-first-token speedup: {sp:.1f}x")

@@ -194,7 +194,7 @@ def _op_bytes(op: Op, comp: Computation) -> int:
     Slice-aware: dynamic-slice/gather read only the slice (2x output);
     dynamic-update-slice/scatter touch only the update region (2x update).
     Everything else: operands + output (XLA 'bytes accessed' convention;
-    an upper bound at CPU-fusion granularity — see DESIGN.md).
+    an upper bound at CPU-fusion granularity).
     """
     _, out_b = _shape_elems_and_bytes(op.type_str)
     tag = op.kind + " " + op.name

@@ -4,7 +4,7 @@ A thread-local :class:`AxisRules` context maps logical roles to mesh axes.
 Outside any context (unit tests on one device) every constraint is a no-op,
 so model code is portable.
 
-Conventions (see DESIGN.md §5):
+Conventions:
   * batch dims           -> ('pod','data') / ('data',)
   * up-proj weights      -> (in='data' [FSDP], out='model' [TP])
   * down-proj weights    -> (in='model', out='data')

@@ -1,0 +1,225 @@
+"""Multi-accelerator platform layer: partition heuristics, the
+accelerator pool + LO migration-on-idle, the multi-instance simulator
+(per-instance/global mode coordination, shared-DMA contention), the
+partitioned WCRT analysis, and the KV-slot arena bookkeeping."""
+import numpy as np
+import pytest
+
+from repro.core import (Crit, MCSSimulator, Policy, TaskParams,
+                        analyze_partitioned, generate_taskset, partition,
+                        simulate, simulate_multi, utilization,
+                        workload_library)
+from repro.core.platform import (AcceleratorPool, HEURISTICS,
+                                 MigrationPolicy)
+from repro.core.serving import KVSlotArena
+from repro.core.taskgen import uunifast_discard
+
+LIB = workload_library(include_archs=False)
+
+
+def _task(tid, prio, u, crit=Crit.LO, c_lo=1e5):
+    return TaskParams(tid=tid, priority=prio, period=c_lo / u,
+                      deadline=c_lo / u, c_lo=c_lo, c_hi=2 * c_lo,
+                      crit=crit, eta=1, workload="small_gemm")
+
+
+class TestPartition:
+    def test_every_task_assigned_every_heuristic(self):
+        tasks = generate_taskset(1.6, n_tasks=12, seed=0, programs=LIB)
+        for h in HEURISTICS:
+            a = partition(tasks, 4, h)
+            assert sorted(a.task_to_instance) == sorted(t.tid for t in tasks)
+            assert set(a.task_to_instance.values()) <= set(range(4))
+
+    def test_single_instance_degenerates(self):
+        tasks = generate_taskset(0.8, n_tasks=8, seed=1, programs=LIB)
+        for h in HEURISTICS:
+            a = partition(tasks, 1, h)
+            assert all(i == 0 for i in a.task_to_instance.values())
+
+    def test_worst_fit_balances_load(self):
+        tasks = [_task(i, i, 0.2) for i in range(8)]
+        a = partition(tasks, 4, "worst_fit")
+        loads = [utilization(a.tasks_on(i, tasks)) for i in range(4)]
+        assert max(loads) - min(loads) < 0.21   # within one task's share
+
+    def test_first_fit_packs(self):
+        tasks = [_task(i, i, 0.2) for i in range(8)]
+        a = partition(tasks, 4, "first_fit")
+        loads = [utilization(a.tasks_on(i, tasks)) for i in range(4)]
+        assert loads[0] > 0.79                  # 5 x 0.2 fit on instance 0
+        assert loads[2] == loads[3] == 0
+
+    def test_crit_aware_spreads_hi_tasks(self):
+        tasks = [_task(i, i, 0.1, Crit.HI) for i in range(4)] + \
+                [_task(i + 4, i + 4, 0.1, Crit.LO) for i in range(4)]
+        a = partition(tasks, 4, "crit_aware")
+        hi_per_inst = [sum(1 for t in tasks
+                           if t.crit == Crit.HI
+                           and a.instance_of(t.tid) == i)
+                       for i in range(4)]
+        assert hi_per_inst == [1, 1, 1, 1]
+
+    def test_bad_args_raise(self):
+        tasks = [_task(0, 0, 0.1)]
+        with pytest.raises(ValueError):
+            partition(tasks, 0)
+        with pytest.raises(ValueError):
+            partition(tasks, 2, "best_fit")
+
+
+class TestUUnifastDiscard:
+    def test_respects_cap_and_total(self):
+        rng = np.random.default_rng(7)
+        u = uunifast_discard(12, 2.4, rng, max_u=0.5)
+        assert u.max() <= 0.5
+        assert abs(u.sum() - 2.4) < 1e-9
+
+    def test_infeasible_cap_raises(self):
+        rng = np.random.default_rng(0)
+        with pytest.raises(ValueError):
+            uunifast_discard(2, 2.0, rng, max_u=0.5, max_tries=10)
+
+
+class TestAcceleratorPool:
+    def test_migrate_moves_saved_context(self):
+        tasks = [_task(0, 0, 0.3), _task(1, 1, 0.3)]
+        pool = AcceleratorPool(2, heuristic="worst_fit")
+        a = pool.assign(tasks)
+        src = a.instance_of(0)
+        dst = 1 - src
+        pool.instances[src].dram[0] = {
+            "accumulator": 1024, "scratchpad": 4096,
+            "kept_resident": False, "config": (None,) * 4, "remap": {}}
+        cycles = pool.migrate(0, dst)
+        assert a.instance_of(0) == dst
+        assert 0 in pool.instances[dst].dram
+        assert 0 not in pool.instances[src].dram
+        assert cycles > 0                       # shipping is not free
+        assert pool.migrations == 1
+
+    def test_migrate_to_same_instance_is_free(self):
+        tasks = [_task(0, 0, 0.3)]
+        pool = AcceleratorPool(2)
+        a = pool.assign(tasks)
+        assert pool.migrate(0, a.instance_of(0)) == 0.0
+        assert pool.migrations == 0
+
+
+class TestMultiAccelSimulator:
+    def test_single_instance_matches_single_simulator(self):
+        """N=1 with migration disabled reproduces MCSSimulator exactly
+        (same rng contract, same event semantics)."""
+        for seed in (0, 2):
+            tasks = generate_taskset(0.6, n_tasks=10, seed=seed,
+                                     programs=LIB)
+            m1 = simulate(tasks, LIB, Policy.mesc(), duration=1e8,
+                          seed=seed)
+            m2 = simulate_multi(
+                tasks, LIB, Policy.mesc(), n_instances=1, duration=1e8,
+                seed=seed,
+                migration=MigrationPolicy(enabled=False)).merged()
+            assert m1.jobs == m2.jobs
+            assert m1.misses == m2.misses
+            assert m1.cs_count == m2.cs_count
+            assert m1.pi_blocking == m2.pi_blocking
+            assert m1.ci_blocking == m2.ci_blocking
+
+    def test_partitioned_mesc_bounds_blocking_vs_np(self):
+        """On N=4 instances, MESC keeps inversions at instruction scale
+        while the non-preemptive pool exposes whole-workload blocking —
+        extra instances alone cannot resolve inversions."""
+        tasks = generate_taskset(2.4, n_tasks=12, seed=1, programs=LIB,
+                                 max_task_u=0.5)
+        mesc = simulate_multi(tasks, LIB, Policy.mesc(), n_instances=4,
+                              duration=2e8, seed=1).merged()
+        np_ = simulate_multi(tasks, LIB, Policy.non_preemptive(),
+                             n_instances=4, duration=2e8, seed=1).merged()
+        b_mesc = mesc.pi_blocking + mesc.ci_blocking
+        b_np = np_.pi_blocking + np_.ci_blocking
+        assert b_mesc and b_np
+        assert max(b_mesc) * 10 < max(b_np)
+        assert np.mean(b_mesc) * 10 < np.mean(b_np)
+
+    def test_migration_on_idle_fires_and_is_charged(self):
+        tasks = generate_taskset(1.6, n_tasks=12, seed=1, programs=LIB,
+                                 max_task_u=0.5)
+        multi = simulate_multi(tasks, LIB, Policy.mesc(), n_instances=4,
+                               duration=2e8, seed=1)
+        assert multi.migrations > 0
+        assert multi.migration_cycles > 0
+        off = simulate_multi(tasks, LIB, Policy.mesc(), n_instances=4,
+                             duration=2e8, seed=1,
+                             migration=MigrationPolicy(enabled=False))
+        assert off.migrations == 0
+        assert off.migration_cycles == 0
+
+    def test_dma_contention_accounted_only_when_enabled(self):
+        tasks = generate_taskset(2.4, n_tasks=12, seed=0, programs=LIB,
+                                 max_task_u=0.5)
+        on = simulate_multi(tasks, LIB, Policy.mesc(), n_instances=4,
+                            duration=1e8, seed=0)
+        offm = simulate_multi(tasks, LIB, Policy.mesc(), n_instances=4,
+                              duration=1e8, seed=0, dma_contention=False)
+        assert on.dma_contention_cycles > 0
+        assert offm.dma_contention_cycles == 0
+
+    def test_merged_metrics_sum_per_instance(self):
+        tasks = generate_taskset(1.2, n_tasks=10, seed=3, programs=LIB,
+                                 max_task_u=0.5)
+        multi = simulate_multi(tasks, LIB, Policy.mesc(), n_instances=2,
+                               duration=1e8, seed=3)
+        merged = multi.merged()
+        assert merged.jobs["LO"] == sum(m.jobs["LO"]
+                                        for m in multi.per_instance)
+        assert merged.jobs["HI"] == sum(m.jobs["HI"]
+                                        for m in multi.per_instance)
+        assert merged.cs_count == sum(m.cs_count
+                                      for m in multi.per_instance)
+        assert merged.jobs["LO"] + merged.jobs["HI"] > 0
+
+
+class TestPartitionedWCRT:
+    def test_more_instances_admit_higher_total_utilisation(self):
+        tasks = generate_taskset(1.2, n_tasks=12, seed=3, programs=LIB)
+        verdicts = [analyze_partitioned(tasks, LIB, n_instances=n)
+                    .schedulable for n in (1, 2, 4)]
+        assert verdicts == [False, True, True]
+
+    def test_dma_contention_stretch_can_break_schedulability(self):
+        """The shared-DMA model inflates Upsilon^S/R by N; with it off,
+        analysis can only get more optimistic."""
+        tasks = generate_taskset(1.6, n_tasks=12, seed=3, programs=LIB)
+        with_dma = analyze_partitioned(tasks, LIB, n_instances=4,
+                                       dma_contention=True)
+        without = analyze_partitioned(tasks, LIB, n_instances=4,
+                                      dma_contention=False)
+        assert without.schedulable or not with_dma.schedulable
+
+    def test_empty_instances_are_schedulable(self):
+        tasks = [_task(0, 0, 0.2, Crit.HI)]
+        r = analyze_partitioned(tasks, LIB, n_instances=4)
+        assert sum(1 for res in r.per_instance.values()
+                   if not res.lo and not res.hi) >= 3
+
+
+class TestKVSlotArena:
+    def test_quotas_partition_total(self):
+        a = KVSlotArena(5, 2)
+        assert a.quotas == [3, 2]
+        with pytest.raises(ValueError):
+            KVSlotArena(4, 2, quotas=[3, 3])
+        with pytest.raises(ValueError):
+            KVSlotArena(1, 2)                 # a lane would get 0 slots
+
+    def test_acquire_release_enforce_quota(self):
+        a = KVSlotArena(2, 2)
+        a.acquire(0, 10)
+        a.acquire(0, 10)                      # idempotent re-acquire
+        assert a.held(0) == 1
+        with pytest.raises(RuntimeError):
+            a.acquire(0, 11)                  # lane 0 quota = 1
+        a.acquire(1, 12)                      # lane 1 unaffected
+        a.release(0, 10)
+        a.acquire(0, 11)
+        assert (a.held(0), a.held(1)) == (1, 1)

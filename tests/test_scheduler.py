@@ -55,6 +55,71 @@ class TestModeRules:
         nxt = pick_next(tcbs, Mode.TRANS, [], Policy.mesc())
         assert nxt.tid == 1  # only not-yet-saved LO data may run
 
+    def test_transition_two_resident_lo_stays_transition(self):
+        """With two LO-tasks' data still in the accelerator the system
+        must NOT advance to HI-mode (the <=1-resident-LO invariant)."""
+        from repro.core.scheduler import update_mode
+        tcbs = {0: _tcb(0, 1, Crit.LO, resident=True),
+                1: _tcb(1, 2, Crit.LO, resident=True)}
+        mode = update_mode(Mode.TRANS, tcbs, resident_lo=[0, 1],
+                           any_active=True)
+        assert mode == Mode.TRANS
+        # both resident LO-tasks stay eligible (highest priority first)
+        elig = eligible_set(tcbs, Mode.TRANS, [0, 1], Policy.mesc())
+        assert {t.tid for t in elig} == {0, 1}
+        # one save later the countdown completes -> HI-mode
+        assert update_mode(Mode.TRANS, tcbs, resident_lo=[1],
+                           any_active=True) == Mode.HI
+
+    def test_idle_reverts_to_lo(self):
+        """Idle system -> revert to LO-mode (HI directly; transition
+        first completes its countdown to HI, then reverts)."""
+        from repro.core.scheduler import update_mode
+        assert update_mode(Mode.HI, {}, resident_lo=[],
+                           any_active=False) == Mode.LO
+        # transition: <=1 resident LO always advances to HI first...
+        mid = update_mode(Mode.TRANS, {}, resident_lo=[], any_active=False)
+        assert mid == Mode.HI
+        # ...and the next scheduler invocation reverts the idle system
+        assert update_mode(mid, {}, resident_lo=[],
+                           any_active=False) == Mode.LO
+        # never revert while work remains
+        assert update_mode(Mode.HI, {}, resident_lo=[],
+                           any_active=True) == Mode.HI
+
+
+class TestModeCoordinator:
+    """Per-instance mode machines + platform aggregation (platform layer)."""
+
+    def test_platform_mode_is_most_severe(self):
+        from repro.core.scheduler import ModeCoordinator
+        co = ModeCoordinator(3)
+        assert co.platform_mode() == Mode.LO
+        co.set_mode(1, Mode.TRANS)
+        assert co.platform_mode() == Mode.TRANS
+        co.set_mode(2, Mode.HI)
+        assert co.platform_mode() == Mode.HI
+        assert co.degraded() == [1, 2]
+        assert co.instances_in(Mode.LO) == [0]
+
+    def test_per_instance_progression_is_independent(self):
+        """An overrun on one instance must not degrade the others."""
+        from repro.core.scheduler import ModeCoordinator
+        co = ModeCoordinator(2)
+        co.set_mode(0, Mode.TRANS)
+        # instance 0: two resident LO -> stays in transition
+        assert co.update_instance(0, {}, resident_lo=[7, 8],
+                                  any_active=True) == Mode.TRANS
+        # instance 1 stays untouched in LO
+        assert co.mode_of(1) == Mode.LO
+        # instance 0 completes its countdown -> HI; 1 still LO
+        assert co.update_instance(0, {}, resident_lo=[8],
+                                  any_active=True) == Mode.HI
+        assert co.mode_of(1) == Mode.LO
+        # idle -> both revert
+        co.update_instance(0, {}, resident_lo=[], any_active=False)
+        assert co.platform_mode() == Mode.LO
+
 
 class TestBankAllocation:
     def test_zero_copy_when_banks_fit(self):
