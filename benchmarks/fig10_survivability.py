@@ -20,22 +20,22 @@ U = 0.8
 OVERRUN = 0.5
 
 
-def sweeps(full: bool = False):
+def sweeps(full: bool = False, engine: str = "event"):
     n_sets = 400 if full else max(DEFAULT_SETS // 2, 30)
     return (Sweep(name="fig10_gamma", policies=(Policy.mesc(),),
                   utils=(U,), gammas=GAMMAS, n_sets=n_sets,
-                  overrun_prob=OVERRUN),
+                  overrun_prob=OVERRUN, engine=engine),
             Sweep(name="fig10_beta", policies=(Policy.mesc(),),
                   utils=(U,), n_tasks=BETAS, n_sets=n_sets,
-                  overrun_prob=OVERRUN))
+                  overrun_prob=OVERRUN, engine=engine))
 
 
 def _surv(cell) -> float:
     return ratio_of_sums(cell, "lo_done_in_hi", "lo_released_in_hi")
 
 
-def main(full: bool = False, **campaign_kw):
-    gamma_sweep, beta_sweep = sweeps(full)
+def main(full: bool = False, engine: str = "event", **campaign_kw):
+    gamma_sweep, beta_sweep = sweeps(full, engine)
     n_sets = gamma_sweep.n_sets
     out = {}
     with Timer() as t:

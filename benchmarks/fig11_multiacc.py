@@ -47,7 +47,11 @@ def sweep(full: bool = False) -> FuncSweep:
         "repro.experiments.multiacc:simulate_multiacc_point", items)
 
 
-def main(full: bool = False, **campaign_kw):
+def main(full: bool = False, engine: str = "event",
+         **campaign_kw):
+    # engine: accepted for run.py uniformity; this figure has no
+    # single-accelerator DES sweep for the vec backend to run
+    del engine
     sw = sweep(full)
     with Timer() as t:
         rows = Campaign(sw, **campaign_kw).collect()

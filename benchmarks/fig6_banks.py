@@ -54,7 +54,11 @@ def sweep(full: bool = False) -> FuncSweep:
                           [{"workload": n} for n in names])
 
 
-def main(full: bool = False, **campaign_kw):
+def main(full: bool = False, engine: str = "event",
+         **campaign_kw):
+    # engine: accepted for run.py uniformity; this figure has no
+    # single-accelerator DES sweep for the vec backend to run
+    del engine
     with Timer() as t:
         rows = Campaign(sweep(full), **campaign_kw).collect()
     print(",".join(COLUMNS))

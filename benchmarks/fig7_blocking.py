@@ -25,15 +25,15 @@ POLICIES = (Policy.mesc(),
             Policy.non_preemptive())
 
 
-def sweep(full: bool = False) -> Sweep:
+def sweep(full: bool = False, engine: str = "event") -> Sweep:
     n_sets = max((1000 if full else DEFAULT_SETS) // 5, 20)
     return Sweep(name="fig7_blocking", policies=POLICIES, utils=UTILS,
-                 n_sets=n_sets)
+                 n_sets=n_sets, engine=engine)
 
 
-def main(full: bool = False, **campaign_kw):
+def main(full: bool = False, engine: str = "event", **campaign_kw):
     with Timer() as t:
-        rows = Campaign(sweep(full), **campaign_kw).collect()
+        rows = Campaign(sweep(full, engine), **campaign_kw).collect()
     cells = group_rows(rows, "policy", "u")
     print("u,c_save,c_restore,c_save_noB,c_restore_noB,"
           "pi_mesc,ci_mesc,pi_noCS,ci_noCS,pi_speedup,ci_speedup")

@@ -15,16 +15,16 @@ BETAS = (4, 8, 10, 14, 20)
 U = 0.8
 
 
-def sweeps(full: bool = False):
+def sweeps(full: bool = False, engine: str = "event"):
     n_sets = 400 if full else max(DEFAULT_SETS // 2, 30)
     return (Sweep(name="fig9_gamma", policies=(Policy.mesc(),),
-                  utils=(U,), gammas=GAMMAS, n_sets=n_sets),
+                  utils=(U,), gammas=GAMMAS, n_sets=n_sets, engine=engine),
             Sweep(name="fig9_beta", policies=(Policy.mesc(),),
-                  utils=(U,), n_tasks=BETAS, n_sets=n_sets))
+                  utils=(U,), n_tasks=BETAS, n_sets=n_sets, engine=engine))
 
 
-def main(full: bool = False, **campaign_kw):
-    gamma_sweep, beta_sweep = sweeps(full)
+def main(full: bool = False, engine: str = "event", **campaign_kw):
+    gamma_sweep, beta_sweep = sweeps(full, engine)
     n_sets = gamma_sweep.n_sets
     out = {}
     with Timer() as t:

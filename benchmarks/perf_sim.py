@@ -1,0 +1,152 @@
+"""Simulation-engine performance harness: points/sec for the
+event-driven and vectorized backends on a fixed fig8-style corpus.
+
+The corpus is MESC over the fig8 utilisation band (fig8's task-set
+recipe: 10-task UUnifast sets, CF=2, duration 2e8 cycles), 512
+``(taskset, seed)`` points — the unit every paper figure is built from.
+Both engines simulate the *identical* corpus single-process, so the
+ratio is an engine-vs-engine number, not a parallelism artefact; the
+harness also asserts the two engines' per-point metrics agree
+(the vectorized backend's exactness contract).
+
+Results are written to ``BENCH_sim.json`` at the repo root — the
+committed copy is the perf baseline every future PR is compared
+against (CI job ``perf-smoke`` prints the delta).
+
+    PYTHONPATH=src python -m benchmarks.perf_sim [--smoke]
+        [--out BENCH_sim.json] [--baseline BENCH_sim.json]
+
+``--smoke`` runs a reduced corpus (32 points, shorter horizon) sized
+for CI; it updates only the ``smoke`` section of the JSON so the
+committed ``full`` numbers survive.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from pathlib import Path
+
+SCHEMA_VERSION = 1
+REPO_ROOT = Path(__file__).resolve().parent.parent
+DEFAULT_OUT = REPO_ROOT / "BENCH_sim.json"
+
+FULL = dict(utils=(0.6, 0.7, 0.8, 0.9), n_sets=128, duration=2e8,
+            n_tasks=10)
+SMOKE = dict(utils=(0.7, 0.9), n_sets=16, duration=2e7, n_tasks=10)
+
+
+def build_corpus(spec):
+    from repro.core import Policy, generate_taskset
+    from repro.experiments.runner import cached_library
+    lib = cached_library("sim")
+    tasksets, seeds = [], []
+    for u in spec["utils"]:
+        for s in range(spec["n_sets"]):
+            tasksets.append(generate_taskset(
+                u, seed=s, n_tasks=spec["n_tasks"], programs=lib))
+            seeds.append(s)
+    return lib, Policy.mesc(), tasksets, seeds
+
+
+def measure(spec):
+    from repro.core.simulator import simulate
+    from repro.core.simulator_vec import simulate_vbatch
+    from repro.experiments.metrics import metrics_row
+    lib, policy, tasksets, seeds = build_corpus(spec)
+    n = len(tasksets)
+
+    t0 = time.perf_counter()
+    ev = [simulate(ts, lib, policy, duration=spec["duration"], seed=s)
+          for ts, s in zip(tasksets, seeds)]
+    t_event = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    vc = simulate_vbatch(tasksets, lib, policy, seeds=seeds,
+                         duration=spec["duration"], batch_size=512)
+    t_vec = time.perf_counter() - t0
+
+    mismatches = sum(metrics_row(a) != metrics_row(b)
+                     for a, b in zip(ev, vc))
+    return {
+        "corpus": {"style": "fig8", "policy": policy.name,
+                   "utils": list(spec["utils"]), "n_sets": spec["n_sets"],
+                   "n_tasks": spec["n_tasks"], "duration": spec["duration"],
+                   "points": n},
+        "engines": {
+            "event": {"points": n, "seconds": round(t_event, 3),
+                      "points_per_sec": round(n / t_event, 2)},
+            "vec": {"points": n, "seconds": round(t_vec, 3),
+                    "points_per_sec": round(n / t_vec, 2)},
+        },
+        "speedup_vec_vs_event": round(t_event / t_vec, 2),
+        "exact_match_points": n - mismatches,
+        "mismatched_points": mismatches,
+    }
+
+
+def load(path: Path) -> dict:
+    try:
+        return json.loads(path.read_text())
+    except (FileNotFoundError, json.JSONDecodeError):
+        return {"schema_version": SCHEMA_VERSION, "sections": {}}
+
+
+def print_delta(section: str, new: dict, baseline: dict) -> None:
+    base = baseline.get("sections", {}).get(section)
+    if not base:
+        print(f"# no committed baseline for section {section!r}")
+        return
+    for eng in ("event", "vec"):
+        old_pps = base["engines"][eng]["points_per_sec"]
+        new_pps = new["engines"][eng]["points_per_sec"]
+        delta = 100.0 * (new_pps - old_pps) / old_pps if old_pps else 0.0
+        print(f"perf_delta,{section},{eng},{old_pps},{new_pps},"
+              f"{delta:+.1f}%")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced CI-sized corpus (updates 'smoke' only)")
+    ap.add_argument("--out", default=str(DEFAULT_OUT),
+                    help="where to write the updated BENCH_sim.json")
+    ap.add_argument("--baseline", default=str(DEFAULT_OUT),
+                    help="committed baseline to diff against")
+    args = ap.parse_args()
+
+    section = "smoke" if args.smoke else "full"
+    spec = SMOKE if args.smoke else FULL
+    baseline = load(Path(args.baseline))
+    result = measure(spec)
+
+    doc = load(Path(args.out))
+    doc["schema_version"] = SCHEMA_VERSION
+    doc.setdefault("sections", {})
+    # keep the other section's committed numbers intact
+    for k, v in baseline.get("sections", {}).items():
+        doc["sections"].setdefault(k, v)
+    doc["sections"][section] = result
+    doc["host"] = {"cpus": os.cpu_count()}
+
+    Path(args.out).write_text(json.dumps(doc, indent=1, sort_keys=True)
+                              + "\n")
+    eng = result["engines"]
+    print(f"corpus,{section},points={result['corpus']['points']}")
+    print(f"event,{eng['event']['seconds']}s,"
+          f"{eng['event']['points_per_sec']}pts/s")
+    print(f"vec,{eng['vec']['seconds']}s,"
+          f"{eng['vec']['points_per_sec']}pts/s")
+    print(f"speedup,vec_vs_event,{result['speedup_vec_vs_event']}x")
+    print(f"equivalence,{result['exact_match_points']}/"
+          f"{result['corpus']['points']}")
+    print_delta(section, result, baseline)
+    if result["mismatched_points"]:
+        raise SystemExit(
+            f"{result['mismatched_points']} corpus points diverged "
+            "between engines — vec exactness contract violated")
+
+
+if __name__ == "__main__":
+    main()

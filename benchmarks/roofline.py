@@ -97,7 +97,11 @@ def sweep(full: bool = False) -> FuncSweep:
                           items, cache=False)
 
 
-def main(full: bool = False, **campaign_kw):
+def main(full: bool = False, engine: str = "event",
+         **campaign_kw):
+    # engine: accepted for run.py uniformity; this figure has no
+    # single-accelerator DES sweep for the vec backend to run
+    del engine
     cells = Campaign(sweep(full), **campaign_kw).collect()
     rows = []
     print("arch,shape,compute_ms,memory_ms,collective_ms,dominant,"

@@ -7,11 +7,15 @@ pure cache replay.  Prints ``name,us_per_call,derived`` CSV summary
 lines (plus the per-figure CSV blocks above them).
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--only fig7,fig8]
-        [--workers N] [--cache-dir DIR] [--no-cache] [--smoke]
+        [--engine event|vec] [--workers N] [--cache-dir DIR] [--no-cache]
+        [--smoke]
 
 ``--full`` uses the paper's 1000 task sets per point (slow); default is
-a statistically-meaningful reduction.  ``--smoke`` runs a 2-point sweep
-end-to-end (used by CI).
+a statistically-meaningful reduction.  ``--engine vec`` routes the
+single-accelerator simulation sweeps through the vectorized batch
+backend (``core.simulator_vec``; separate cache namespace, see
+docs/performance.md).  ``--smoke`` runs a 2-point sweep end-to-end
+(used by CI).
 """
 from __future__ import annotations
 
@@ -19,12 +23,12 @@ import argparse
 import sys
 
 
-def smoke(**campaign_kw) -> None:
+def smoke(engine: str = "event", **campaign_kw) -> None:
     """Tiny end-to-end campaign: 2 points through the full engine path."""
     from repro.core import Policy
     from repro.experiments import Campaign, Sweep
     sweep = Sweep(name="smoke", policies=(Policy.mesc(),), utils=(0.7,),
-                  n_sets=2, duration=2e6)
+                  n_sets=2, duration=2e6, engine=engine)
     camp = Campaign(sweep, **campaign_kw)
     rows = camp.collect()
     print("point,policy,u,seed,jobs,success_all")
@@ -52,12 +56,15 @@ def main() -> None:
                     help="always re-simulate; write nothing to disk")
     ap.add_argument("--smoke", action="store_true",
                     help="run a tiny 2-point campaign and exit (CI)")
+    ap.add_argument("--engine", default="event", choices=("event", "vec"),
+                    help="simulation backend for the sim sweeps "
+                         "(vec = vectorized batch engine)")
     args = ap.parse_args()
     campaign_kw = dict(workers=args.workers, cache_dir=args.cache_dir,
                        use_cache=not args.no_cache)
 
     if args.smoke:
-        smoke(**campaign_kw)
+        smoke(engine=args.engine, **campaign_kw)
         return
 
     from benchmarks import (fig2_instruction_costs, fig6_banks,
@@ -80,7 +87,7 @@ def main() -> None:
     for name in only:
         print(f"# === {name} ===", file=sys.stderr)
         try:
-            table[name](full=args.full, **campaign_kw)
+            table[name](full=args.full, engine=args.engine, **campaign_kw)
         except Exception as e:  # keep the harness going
             print(f"{name},0,ERROR:{type(e).__name__}:{e}")
 

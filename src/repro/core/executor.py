@@ -98,6 +98,10 @@ class GemminiRT:
         self.queue_depth = 8                         # reservation station
         # DRAM context store: tid -> dict of saved regions
         self.dram: Dict[int, dict] = {}
+        # per-task eta-bank cache (a task's program never changes mid-run)
+        self._eta_banks: Dict[int, int] = {}
+        self._bb = self.remapper.bank_bytes
+        self._cap = self._bb * len(self.remapper.banks)
 
     # ------------------------------------------------------------------
     # streaming-mode bookkeeping (the scheduler charges cycles; we track
@@ -109,16 +113,20 @@ class GemminiRT:
         its working set (bounded by eta banks) and accumulator fill.  When
         the scratchpad is contended, residency saturates at what the
         remapper can actually lock (no eviction of other tasks' banks)."""
-        bb = self.remapper.bank_bytes
-        cap = bb * len(self.remapper.banks)
-        eta_banks = max(1, -(-min(program.working_set_bytes, cap) // bb))
+        bb = self._bb
+        cap = self._cap
+        eta_banks = self._eta_banks.get(tid)
+        if eta_banks is None:
+            eta_banks = max(1, -(-min(program.working_set_bytes, cap) // bb))
+            self._eta_banks[tid] = eta_banks
         if self.use_remapper:
-            have = self.remapper.resident_bytes(tid)
-            avail = have + self.remapper.free_banks() * bb
+            rm = self.remapper
+            have = rm.resident_bytes(tid)
+            avail = have + rm.free_banks() * bb
             want = min(eta_banks * bb, avail,
                        have + int(cycles * DMA_BYTES_PER_CYCLE))
             if want > have:
-                self.remapper.write(tid, have, want - have)
+                rm.write(tid, have, want - have)
         else:
             # no bank model: explicit addressing, residency tracked only in
             # aggregate; every context switch must evacuate it all
@@ -127,9 +135,10 @@ class GemminiRT:
             want = min(eta_banks * bb, max(cap - others, 0),
                        have + int(cycles * DMA_BYTES_PER_CYCLE))
             self.spad_bytes[tid] = max(have, want)
-        self.accum_bytes_used[tid] = min(
-            ACCUM_BYTES, self.accum_bytes_used.get(tid, 0)
-            + int(cycles * DMA_BYTES_PER_CYCLE // 4))
+        acc = self.accum_bytes_used.get(tid, 0)
+        if acc < ACCUM_BYTES:
+            self.accum_bytes_used[tid] = min(
+                ACCUM_BYTES, acc + int(cycles * DMA_BYTES_PER_CYCLE // 4))
 
     # ------------------------------------------------------------------
     # Context switch (paper Alg. 1 + SS IV 'Context switch')

@@ -61,6 +61,11 @@ class Program:
         for s, e in zip(self.segments, ends):
             op_end[s.operator] = int(e)
         self._operator_ends = np.asarray([op_end[o] for o in op_ids])
+        # per-segment scalars precomputed once — Segment.cycles /
+        # pattern_cycles are properties that re-sum on every access,
+        # which dominates the boundary queries in the simulator hot loop
+        self._seg_cycles = [s.cycles for s in self.segments]
+        self._seg_pattern_cycles = [s.pattern_cycles for s in self.segments]
 
     @property
     def total_cycles(self) -> int:
@@ -93,9 +98,9 @@ class Program:
         offset = min(max(offset, 0.0), self._total - 1e-9)
         i = int(np.searchsorted(self._seg_ends, offset, side="right"))
         seg = self.segments[i]
-        seg_start = self._seg_ends[i] - seg.cycles
+        seg_start = self._seg_ends[i] - self._seg_cycles[i]
         within = offset - seg_start
-        pat = seg.pattern_cycles
+        pat = self._seg_pattern_cycles[i]
         rep = int(within // pat)
         rem = within - rep * pat
         acc = 0

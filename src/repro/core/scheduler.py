@@ -83,11 +83,36 @@ def eligible_set(tcbs: Dict[int, TCB], mode: Mode, resident: List[int],
 
 def pick_next(tcbs: Dict[int, TCB], mode: Mode, resident: List[int],
               policy: Policy) -> Optional[TCB]:
-    """Kernel.Scheduler.Find_next_task with MESC mode rules."""
-    elig = eligible_set(tcbs, mode, resident, policy)
-    if not elig:
-        return None
-    return min(elig, key=lambda t: t.params.priority)
+    """Kernel.Scheduler.Find_next_task with MESC mode rules.
+
+    Single fused pass over the TCBs (the simulator calls this once per
+    scheduling event); equivalent to
+    ``min(eligible_set(...), key=priority)`` with first-wins ties.
+    """
+    # ACTIVE == every status but PENDING, so one identity check suffices
+    active = [t for t in tcbs.values() if t.status is not Status.PENDING]
+    mode_lo = mode is Mode.LO
+    hi_active = False
+    if not mode_lo:
+        for t in active:
+            if t.params.crit is Crit.HI:
+                hi_active = True
+                break
+    drop_lo = policy.drop_lo_in_hi
+    trans = mode is Mode.TRANS
+    best: Optional[TCB] = None
+    best_prio = None
+    for t in active:
+        if t.params.crit is not Crit.HI and not mode_lo:
+            if drop_lo or hi_active:
+                continue
+            if trans and not (t.data_in_accel or t.tid in resident):
+                continue
+        prio = t.params.priority
+        if best is None or prio < best_prio:
+            best = t
+            best_prio = prio
+    return best
 
 
 def update_mode(mode: Mode, tcbs: Dict[int, TCB], resident_lo: List[int],

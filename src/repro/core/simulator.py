@@ -32,7 +32,9 @@ and cache each point by content hash without changing any result.
 from __future__ import annotations
 
 import dataclasses
+import enum
 import heapq
+from heapq import heappush
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -57,6 +59,22 @@ SIM_SEMANTICS_VERSION = 1
 # admission guard, migration retry + idle-wake ticks, un-double-counted
 # overhead.
 MULTI_SIM_SEMANTICS_VERSION = 5
+
+
+class EventKind(enum.IntEnum):
+    """Interned event kinds for the heap tuples (hot loop: comparing and
+    hashing small ints beats per-event string handling)."""
+    RELEASE = 0
+    FINISH = 1
+    OVERRUN = 2
+    TICK = 3
+
+
+# plain ints in the hot loop (IntEnum __eq__ costs a descriptor hop)
+_RELEASE = int(EventKind.RELEASE)
+_FINISH = int(EventKind.FINISH)
+_OVERRUN = int(EventKind.OVERRUN)
+_TICK = int(EventKind.TICK)
 
 
 @dataclasses.dataclass
@@ -114,14 +132,24 @@ class MCSSimulator:
         self._events: List = []      # (time, seq, kind, tid)
         self._seq = 0
         self._last_mode_stamp = 0.0
+        # hot-loop caches: per-task program / LO-crit flag resolved once
+        # instead of two dict hops per dispatch (+ per mode tick)
+        self._progs: Dict[int, Program] = {
+            t.tid: programs[t.workload] for t in tasks}
+        self._is_lo: Dict[int, bool] = {
+            t.tid: t.crit == Crit.LO for t in tasks}
+        self._t_sr = policy.t_sr
+        self._instr_preempt = policy.preemption == "instruction"
+        self._use_banks = policy.use_banks
+        self._note_execution = self.accel.note_execution
 
     # ------------------------------------------------------------------
-    def _push(self, t: float, kind: str, tid: int = -1):
+    def _push(self, t: float, kind: int, tid: int = -1):
         self._seq += 1
-        heapq.heappush(self._events, (t, self._seq, kind, tid))
+        heappush(self._events, (t, self._seq, kind, tid))
 
     def _program(self, tid: int) -> Program:
-        return self.programs[self.params[tid].workload]
+        return self._progs[tid]
 
     def _sample_demand(self, p: TaskParams) -> float:
         if p.crit == Crit.HI and self.rng.random() < self.overrun_prob:
@@ -129,8 +157,8 @@ class MCSSimulator:
         return p.c_lo * self.rng.uniform(0.7, 1.0)
 
     def _next_tick(self, t: float) -> float:
-        k = int(t // self.policy.t_sr) + 1
-        return k * self.policy.t_sr
+        k = int(t // self._t_sr) + 1
+        return k * self._t_sr
 
     # ------------------------------------------------------------------
     def _advance_running(self):
@@ -143,7 +171,7 @@ class MCSSimulator:
             return
         tcb.exec_cycles += elapsed
         self.metrics.exec_cycles += elapsed
-        self.accel.note_execution(tcb.tid, elapsed, self._program(tcb.tid))
+        self._note_execution(tcb.tid, elapsed, self._progs[tcb.tid])
         self._run_started = self.now
 
     def _set_mode(self, mode: Mode):
@@ -155,11 +183,12 @@ class MCSSimulator:
 
     def _mode_tick(self):
         """Mode progression per SS IV."""
+        if self.mode is Mode.LO:
+            return                   # LO only leaves via an overrun event
+        is_lo = self._is_lo
         resident_lo = [t for t in self.accel.remapper.resident_tasks()
-                       if self.params.get(t) is not None
-                       and self.params[t].crit == Crit.LO]
-        any_active = any(t.status in (Status.READY, Status.RUNNING,
-                                      Status.INTERRUPTED)
+                       if is_lo.get(t)]
+        any_active = any(t.status is not Status.PENDING
                          for t in self.tcbs.values())
         if self.mode == Mode.TRANS and len(resident_lo) <= 1:
             self._set_mode(Mode.HI)
@@ -174,8 +203,7 @@ class MCSSimulator:
         if tcb.job_release >= 0 and self.now > tcb.job_deadline:
             self.metrics.misses[crit] += 1
             self.metrics.misses_by_mode[self.mode.value] += 1
-        if getattr(tcb, "released_in_hi", False) \
-                and self.now <= tcb.job_deadline:
+        if tcb.released_in_hi and self.now <= tcb.job_deadline:
             self.metrics.lo_done_in_hi += 1
         self.metrics.overhead_cycles += self.accel.evict(tcb.tid)
         tcb.data_in_accel = False
@@ -212,15 +240,15 @@ class MCSSimulator:
         cur = self.tcbs.get(self.running) if self.running is not None else None
         switch_cost = 0.0
         if cur is not None and cur.tid != nxt.tid:
-            prog = self._program(cur.tid)
-            if self.policy.preemption == "instruction":
+            prog = self._progs[cur.tid]
+            if self._instr_preempt:
                 boundary = prog.next_instruction_boundary(cur.exec_cycles)
             else:  # operator
                 boundary = prog.next_operator_boundary(cur.exec_cycles)
             drain = max(0.0, min(boundary, self.demand[cur.tid])
                         - cur.exec_cycles)
             cur.exec_cycles += drain
-            next_eta = nxt.params.eta if self.policy.use_banks else None
+            next_eta = nxt.params.eta if self._use_banks else None
             br = self.accel.context_save(cur, int(drain), next_eta=next_eta)
             # HI-mode rule: <=1 resident LO-task -> evict on LO->LO preempt
             if (self.mode == Mode.HI and cur.params.crit == Crit.LO
@@ -244,21 +272,24 @@ class MCSSimulator:
         self.accel_free_at = self.now + switch_cost
         # future events for the new running task
         rem = self.demand[nxt.tid] - nxt.exec_cycles
-        self._push(self._run_started + rem, "finish", nxt.tid)
+        self._push(self._run_started + rem, _FINISH, nxt.tid)
         p = nxt.params
         if (p.crit == Crit.HI and not nxt.budget_overrun
                 and nxt.exec_cycles < p.c_lo):
             self._push(self._run_started + (p.c_lo - nxt.exec_cycles),
-                       "overrun", nxt.tid)
+                       _OVERRUN, nxt.tid)
 
     def _schedule(self):
         """One scheduler invocation (a T_sr tick or an interrupt)."""
         if self.now < self.accel_free_at:      # CS in progress
-            self._push(self._next_tick(self.accel_free_at), "tick")
+            self._push(self._next_tick(self.accel_free_at), _TICK)
             return
         self._advance_running()
         self._mode_tick()
-        resident = self.accel.remapper.resident_tasks()
+        # pick_next only consults residency in transition mode (the
+        # "LO may run while not yet saved" rule) — skip the query otherwise
+        resident = self.accel.remapper.resident_tasks() \
+            if self.mode is Mode.TRANS else ()
         nxt = pick_next(self.tcbs, self.mode, resident, self.policy)
         cur = self.tcbs.get(self.running) if self.running is not None else None
         if cur is not None and cur.status != Status.RUNNING:
@@ -279,17 +310,33 @@ class MCSSimulator:
     def run(self) -> RunMetrics:
         for tid, p in self.params.items():
             phase = self.rng.uniform(0, p.period)
-            self._push(phase, "release", tid)
+            self._push(phase, _RELEASE, tid)
         self._run_started = 0.0
-        while self._events:
-            t, _, kind, tid = heapq.heappop(self._events)
-            if t > self.duration:
+        events = self._events
+        heappop = heapq.heappop
+        tcbs = self.tcbs
+        duration = self.duration
+        while events:
+            t, _, kind, tid = heappop(events)
+            if t > duration:
                 break
             self.now = t
-            if kind == "release":
-                tcb = self.tcbs[tid]
+            if kind == _TICK:
+                self._schedule()
+            elif kind == _FINISH:
+                tcb = tcbs[tid]
+                if self.running == tid and tcb.status == Status.RUNNING:
+                    self._advance_running()
+                    if tcb.exec_cycles >= self.demand.get(
+                            tid, float("inf")) - 1e-6:
+                        self._finish_job(tcb)
+                        self.running = None
+                        self._schedule()
+            elif kind == _RELEASE:
+                tcb = tcbs[tid]
                 p = tcb.params
-                self._push(t + p.period, "release", tid)
+                self._seq += 1
+                heappush(events, (t + p.period, self._seq, _RELEASE, tid))
                 if tcb.status != Status.PENDING:
                     # previous job still live: count a miss once, skip release
                     if tcb.job_deadline != float("inf"):
@@ -307,18 +354,11 @@ class MCSSimulator:
                                       and self.mode != Mode.LO)
                 if tcb.released_in_hi:
                     self.metrics.lo_released_in_hi += 1
-                self._push(self._next_tick(t), "tick")
-            elif kind == "finish":
-                tcb = self.tcbs[tid]
-                if self.running == tid and tcb.status == Status.RUNNING:
-                    self._advance_running()
-                    if tcb.exec_cycles >= self.demand.get(
-                            tid, float("inf")) - 1e-6:
-                        self._finish_job(tcb)
-                        self.running = None
-                        self._schedule()
-            elif kind == "overrun":
-                tcb = self.tcbs[tid]
+                self._seq += 1
+                heappush(events,
+                         (self._next_tick(t), self._seq, _TICK, -1))
+            else:                               # _OVERRUN
+                tcb = tcbs[tid]
                 if self.running == tid and tcb.status == Status.RUNNING:
                     self._advance_running()
                     if tcb.exec_cycles >= tcb.params.c_lo - 1e-6 \
@@ -327,8 +367,6 @@ class MCSSimulator:
                         if self.mode == Mode.LO:
                             self._set_mode(Mode.TRANS)   # Mode_switch
                         self._schedule()
-            elif kind == "tick":
-                self._schedule()
         # tail accounting
         self.metrics.mode_cycles[self.mode.value] += \
             self.duration - self._last_mode_stamp
@@ -460,14 +498,16 @@ class MultiAccelSimulator:
         self._seq = 0
         self._last_migration: Dict[int, float] = {}
         self._migration_retry_at: Optional[float] = None
+        self._progs: Dict[int, Program] = {
+            t.tid: programs[t.workload] for t in tasks}
 
     # ------------------------------------------------------------------
-    def _push(self, t: float, kind: str, key: int = -1):
+    def _push(self, t: float, kind: int, key: int = -1):
         self._seq += 1
         heapq.heappush(self._events, (t, self._seq, kind, key))
 
     def _program(self, tid: int) -> Program:
-        return self.programs[self.params[tid].workload]
+        return self._progs[tid]
 
     def _sample_demand(self, p: TaskParams) -> float:
         if p.crit == Crit.HI and self.rng.random() < self.overrun_prob:
@@ -511,11 +551,13 @@ class MultiAccelSimulator:
     def _mode_tick(self, inst: int) -> Dict[int, TCB]:
         """Run the instance's SS IV progression; returns the instance's
         TCB view so the caller's scheduling pass can reuse it."""
+        tcbs = self._inst_tcbs(inst)
+        if self.coordinator.mode_of(inst) is Mode.LO:
+            return tcbs              # LO only leaves via an overrun event
         accel = self.pool.instances[inst]
         resident_lo = [t for t in accel.remapper.resident_tasks()
                        if self.params.get(t) is not None
                        and self.params[t].crit == Crit.LO]
-        tcbs = self._inst_tcbs(inst)
         any_active = any(t.status in ACTIVE for t in tcbs.values())
         # one shared copy of the SS IV progression (scheduler.update_mode)
         self._set_mode(inst, update_mode(self.coordinator.mode_of(inst),
@@ -532,8 +574,7 @@ class MultiAccelSimulator:
             st.metrics.misses[crit] += 1
             st.metrics.misses_by_mode[
                 self.coordinator.mode_of(inst).value] += 1
-        if getattr(tcb, "released_in_hi", False) \
-                and self.now <= tcb.job_deadline:
+        if tcb.released_in_hi and self.now <= tcb.job_deadline:
             st.metrics.lo_done_in_hi += 1
         st.metrics.overhead_cycles += self.pool.instances[inst].evict(tcb.tid)
         tcb.data_in_accel = False
@@ -621,12 +662,12 @@ class MultiAccelSimulator:
         st.run_started = self.now + switch_cost
         st.accel_free_at = self.now + switch_cost
         rem = self.demand[nxt.tid] - nxt.exec_cycles
-        self._push(st.run_started + rem, "finish", nxt.tid)
+        self._push(st.run_started + rem, _FINISH, nxt.tid)
         p = nxt.params
         if (p.crit == Crit.HI and not nxt.budget_overrun
                 and nxt.exec_cycles < p.c_lo):
             self._push(st.run_started + (p.c_lo - nxt.exec_cycles),
-                       "overrun", nxt.tid)
+                       _OVERRUN, nxt.tid)
 
     def _try_migrate_to(self, inst: int):
         """Pull the highest-priority waiting LO-task from a busy
@@ -700,13 +741,14 @@ class MultiAccelSimulator:
     def _schedule(self, inst: int):
         st = self.insts[inst]
         if self.now < st.accel_free_at:       # CS in progress
-            self._push(self._next_tick(st.accel_free_at), "tick", inst)
+            self._push(self._next_tick(st.accel_free_at), _TICK, inst)
             return
         self._advance_running(inst)
         tcbs = self._mode_tick(inst)
         accel = self.pool.instances[inst]
-        resident = accel.remapper.resident_tasks()
         mode = self.coordinator.mode_of(inst)
+        resident = accel.remapper.resident_tasks() \
+            if mode is Mode.TRANS else ()
         nxt = pick_next(tcbs, mode, resident, self.policy)
         cur = self.tcbs.get(st.running) if st.running is not None else None
         if cur is not None and cur.status != Status.RUNNING:
@@ -722,7 +764,7 @@ class MultiAccelSimulator:
                 # then instead of sleeping until this instance's next
                 # own release
                 self._push(self._next_tick(self._migration_retry_at),
-                           "tick", inst)
+                           _TICK, inst)
             return
         if nxt is None:
             return
@@ -739,19 +781,19 @@ class MultiAccelSimulator:
     def run(self) -> MultiRunMetrics:
         for tid, p in self.params.items():
             phase = self.rng.uniform(0, p.period)
-            self._push(phase, "release", tid)
+            self._push(phase, _RELEASE, tid)
         while self._events:
             t, _, kind, key = heapq.heappop(self._events)
             if t > self.duration:
                 break
             self.now = t
-            if kind == "release":
+            if kind == _RELEASE:
                 tid = key
                 inst = self._inst_of(tid)
                 st = self.insts[inst]
                 tcb = self.tcbs[tid]
                 p = tcb.params
-                self._push(t + p.period, "release", tid)
+                self._push(t + p.period, _RELEASE, tid)
                 if tcb.status != Status.PENDING:
                     if tcb.job_deadline != float("inf"):
                         st.metrics.misses[p.crit.value] += 1
@@ -769,15 +811,15 @@ class MultiAccelSimulator:
                 tcb.released_in_hi = (p.crit == Crit.LO and mode != Mode.LO)
                 if tcb.released_in_hi:
                     st.metrics.lo_released_in_hi += 1
-                self._push(self._next_tick(t), "tick", inst)
+                self._push(self._next_tick(t), _TICK, inst)
                 # wake idle instances: their scheduler pass may pull
                 # this (or another waiting) LO-task via migration-on-
                 # idle — without this an instance whose own partition
                 # is quiet never re-checks
                 for other, ost in enumerate(self.insts):
                     if other != inst and ost.running is None:
-                        self._push(self._next_tick(t), "tick", other)
-            elif kind == "finish":
+                        self._push(self._next_tick(t), _TICK, other)
+            elif kind == _FINISH:
                 tid = key
                 inst = self._inst_of(tid)
                 st = self.insts[inst]
@@ -789,7 +831,7 @@ class MultiAccelSimulator:
                         self._finish_job(inst, tcb)
                         st.running = None
                         self._schedule(inst)
-            elif kind == "overrun":
+            elif kind == _OVERRUN:
                 tid = key
                 inst = self._inst_of(tid)
                 st = self.insts[inst]
@@ -802,7 +844,7 @@ class MultiAccelSimulator:
                         if self.coordinator.mode_of(inst) == Mode.LO:
                             self._set_mode(inst, Mode.TRANS)
                         self._schedule(inst)
-            elif kind == "tick":
+            elif kind == _TICK:
                 self._schedule(key)
         # tail accounting
         for inst, st in enumerate(self.insts):

@@ -57,6 +57,7 @@ class TCB:
     jobs_released: int = 0
     jobs_done: int = 0
     deadline_misses: int = 0
+    released_in_hi: bool = False         # LO job released outside LO-mode
     # paper metrics
     blocked_since: Optional[float] = None
     blocking_cause: Optional[str] = None  # 'pi' | 'ci'

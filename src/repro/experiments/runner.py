@@ -13,6 +13,20 @@ point), so the runner simply:
   3. writes each fresh row back to the cache and a campaign manifest
      under the sweep's spec hash.
 
+Execution has two shapes:
+
+  * ``engine="event"`` points run one DES per point (``_run_sim``),
+    mapped over the pool with taskset construction memoized per worker
+    (``_memo_taskset``) — a sweep that revisits the same
+    ``(u, gamma, n_tasks, cf, seed)`` cell under several policies
+    builds each task set once per worker instead of once per point;
+  * ``engine="vec"`` points are grouped into whole cache-miss *chunks*
+    and handed to the vectorized SoA backend
+    (``core.simulator_vec.simulate_vbatch``), which advances hundreds
+    of points per lockstep step.  The content-addressed cache contract
+    is unchanged: every point is still keyed and stored individually
+    (vec keys carry ``VEC_SIM_SEMANTICS_VERSION``).
+
 ``Campaign.collect()`` returns the tidy per-point rows in point order,
 cache hits and fresh runs interleaved transparently — re-running an
 identical sweep touches no simulator at all.
@@ -22,16 +36,22 @@ from __future__ import annotations
 import functools
 import importlib
 import os
-from concurrent.futures import ProcessPoolExecutor
+from concurrent.futures import ProcessPoolExecutor, as_completed
 from pathlib import Path
-from typing import Any, Dict, List, Optional, Union
+from typing import Any, Dict, List, Optional, Tuple, Union
 
 from repro.core.simulator import simulate
+from repro.core.simulator_vec import simulate_vbatch
 from repro.core.taskgen import generate_taskset
 from repro.experiments.cache import ResultCache
 from repro.experiments.metrics import metrics_row
 from repro.experiments.spec import (FuncPoint, FuncSweep, SimPoint, Sweep,
-                                    point_from_dict)
+                                    point_from_dict, policy_from_dict)
+
+# max points per vectorized chunk: wide batches amortize the lockstep
+# overhead (hundreds of points per argmin), and one chunk is one unit
+# of worker-pool scheduling
+VEC_CHUNK = 512
 
 
 def default_workers() -> int:
@@ -60,15 +80,30 @@ def _resolve(fn_ref: str):
     return getattr(importlib.import_module(mod_name), fn_name)
 
 
+@functools.lru_cache(maxsize=4096)
+def _memo_taskset(u: float, gamma: float, n_tasks: int, cf: float,
+                  seed: int, library: str):
+    """Per-worker taskset memo: sweeps revisit the same generation cell
+    under several policies, so build each task set once per process.
+    The returned list is shared — callers must not mutate it."""
+    return generate_taskset(u, gamma=gamma, n_tasks=n_tasks, cf=cf,
+                            seed=seed, programs=cached_library(library))
+
+
 def _run_sim(point: SimPoint) -> Dict[str, Any]:
     programs = cached_library(point.library)
     policy = point.policy_obj()
-    tasks = generate_taskset(point.u, gamma=point.gamma,
-                             n_tasks=point.n_tasks, cf=point.cf,
-                             seed=point.seed, programs=programs)
-    m = simulate(tasks, programs, policy, duration=point.duration,
-                 seed=point.seed, overrun_prob=point.overrun_prob,
-                 cf=point.cf)
+    tasks = _memo_taskset(point.u, point.gamma, point.n_tasks, point.cf,
+                          point.seed, point.library)
+    if point.engine == "vec":
+        m = simulate_vbatch([tasks], programs, policy, seeds=[point.seed],
+                            duration=point.duration,
+                            overrun_prob=point.overrun_prob,
+                            cf=point.cf)[0]
+    else:
+        m = simulate(tasks, programs, policy, duration=point.duration,
+                     seed=point.seed, overrun_prob=point.overrun_prob,
+                     cf=point.cf)
     return metrics_row(m, policy=policy.name, u=point.u, gamma=point.gamma,
                        n_tasks=point.n_tasks, set_index=point.set_index,
                        seed=point.seed)
@@ -90,6 +125,43 @@ def _execute(payload: Dict[str, Any]) -> Dict[str, Any]:
     if isinstance(point, FuncPoint):
         return _run_func(point)
     return _run_sim(point)
+
+
+def _execute_chunk(payloads: List[Dict[str, Any]]) -> List[Dict[str, Any]]:
+    """Worker entry point for a whole chunk of points.
+
+    Vec-engine sim points are grouped by their shared scalar parameters
+    (policy / duration / cf / overrun_prob / library) and executed in
+    one ``simulate_vbatch`` call per group — the batch-execution fast
+    path.  Anything else in the chunk falls back to the per-point
+    runners.  Row order matches the input payload order.
+    """
+    rows: List[Optional[Dict[str, Any]]] = [None] * len(payloads)
+    groups: Dict[Tuple, List[Tuple[int, SimPoint]]] = {}
+    for i, d in enumerate(payloads):
+        point = point_from_dict(d)
+        if isinstance(point, SimPoint) and point.engine == "vec":
+            key = (point.policy, point.duration, point.cf,
+                   point.overrun_prob, point.library)
+            groups.setdefault(key, []).append((i, point))
+        elif isinstance(point, FuncPoint):
+            rows[i] = _run_func(point)
+        else:
+            rows[i] = _run_sim(point)
+    for (pol_items, duration, cf, op, library), items in groups.items():
+        programs = cached_library(library)
+        policy = policy_from_dict(dict(pol_items))
+        tasksets = [_memo_taskset(pt.u, pt.gamma, pt.n_tasks, pt.cf,
+                                  pt.seed, library) for _, pt in items]
+        seeds = [pt.seed for _, pt in items]
+        ms = simulate_vbatch(tasksets, programs, policy, seeds=seeds,
+                             duration=duration, overrun_prob=op, cf=cf,
+                             batch_size=VEC_CHUNK)
+        for (i, pt), m in zip(items, ms):
+            rows[i] = metrics_row(
+                m, policy=policy.name, u=pt.u, gamma=pt.gamma,
+                n_tasks=pt.n_tasks, set_index=pt.set_index, seed=pt.seed)
+    return rows  # type: ignore[return-value]
 
 
 def _echo_point(**kwargs) -> Dict[str, Any]:
@@ -126,14 +198,44 @@ class Campaign:
         self.stats = {"hits": len(points) - len(todo), "misses": len(todo)}
 
         payloads = [points[i].to_dict() for i in todo]
+        # vec-engine sim points take the chunked batch-execution path:
+        # whole cache-miss chunks go to simulate_vbatch instead of one
+        # point per task (each point still cached individually)
+        vec_sel = [k for k, i in enumerate(todo)
+                   if isinstance(points[i], SimPoint)
+                   and points[i].engine == "vec"]
+        vec_set = set(vec_sel)
+        other_sel = [k for k in range(len(todo)) if k not in vec_set]
         if len(payloads) <= 1 or self.workers <= 1:
-            fresh = (_execute(p) for p in payloads)
-            self._drain(todo, keys, rows, fresh)
+            if vec_sel:
+                out = _execute_chunk([payloads[k] for k in vec_sel])
+                self._drain([todo[k] for k in vec_sel], keys, rows, out)
+            fresh = (_execute(payloads[k]) for k in other_sel)
+            self._drain([todo[k] for k in other_sel], keys, rows, fresh)
         else:
-            chunk = max(1, len(payloads) // (self.workers * 8))
             with ProcessPoolExecutor(max_workers=self.workers) as ex:
-                self._drain(todo, keys, rows,
-                            ex.map(_execute, payloads, chunksize=chunk))
+                futures = {}
+                if vec_sel:
+                    per = max(1, min(VEC_CHUNK,
+                                     -(-len(vec_sel) // self.workers)))
+                    for lo in range(0, len(vec_sel), per):
+                        sel = vec_sel[lo:lo + per]
+                        fut = ex.submit(_execute_chunk,
+                                        [payloads[k] for k in sel])
+                        futures[fut] = sel
+                if other_sel:
+                    chunk = max(1, len(other_sel) // (self.workers * 8))
+                    self._drain(
+                        [todo[k] for k in other_sel], keys, rows,
+                        ex.map(_execute, [payloads[k] for k in other_sel],
+                               chunksize=chunk))
+                # drain chunks as they finish, so a killed campaign
+                # keeps every completed chunk (the per-point streaming
+                # guarantee, at chunk granularity)
+                for fut in as_completed(futures):
+                    sel = futures[fut]
+                    self._drain([todo[k] for k in sel], keys, rows,
+                                fut.result())
 
         if self.use_cache:
             self.cache.write_manifest(self.sweep.spec_hash(), {

@@ -32,9 +32,12 @@ from typing import Any, Dict, Iterator, List, Sequence, Tuple
 
 from repro.core.scheduler import Policy
 from repro.core.simulator import SIM_SEMANTICS_VERSION
+from repro.core.simulator_vec import VEC_SIM_SEMANTICS_VERSION
 from repro.core.taskgen import point_seed
 
 SPEC_VERSION = 1
+
+ENGINES = ("event", "vec")
 
 
 def canonical_json(obj: Any) -> str:
@@ -68,6 +71,7 @@ class SimPoint:
     cf: float
     overrun_prob: float
     library: str = "sim"                  # 'sim' (no arch:*) | 'all'
+    engine: str = "event"                 # 'event' | 'vec'
 
     kind = "sim"
 
@@ -80,6 +84,15 @@ class SimPoint:
         # spec format: bumping core.simulator.SIM_SEMANTICS_VERSION
         # invalidates every cached sim point
         d["sim_v"] = SIM_SEMANTICS_VERSION
+        # Cache contract across engines: event-engine points serialize
+        # exactly as before this field existed (their keys — and every
+        # previously cached result — survive), while vec points carry
+        # the engine tag plus their own semantics salt, so the two
+        # engines never share or clobber cache entries.
+        if self.engine == "event":
+            d.pop("engine")
+        else:
+            d["vec_sim_v"] = VEC_SIM_SEMANTICS_VERSION
         return d
 
     @staticmethod
@@ -90,7 +103,8 @@ class SimPoint:
             set_index=d["set_index"], seed=d["seed"],
             duration=d["duration"], cf=d["cf"],
             overrun_prob=d["overrun_prob"],
-            library=d.get("library", "sim"))
+            library=d.get("library", "sim"),
+            engine=d.get("engine", "event"))
 
     def key(self) -> str:
         return canonical_hash(self.to_dict())
@@ -147,6 +161,7 @@ class Sweep:
     cf: float = 2.0
     overrun_prob: float = 0.3
     library: str = "sim"
+    engine: str = "event"                 # 'event' | 'vec'
 
     def __post_init__(self):
         names = [p.name for p in self.policies]
@@ -154,6 +169,9 @@ class Sweep:
             raise ValueError(
                 f"sweep {self.name!r}: policy names must be unique "
                 f"(got {names}); use dataclasses.replace(p, name=...)")
+        if self.engine not in ENGINES:
+            raise ValueError(f"sweep {self.name!r}: unknown engine "
+                             f"{self.engine!r}; want one of {ENGINES}")
 
     def points(self) -> List[SimPoint]:
         out = []
@@ -169,7 +187,8 @@ class Sweep:
                                 seed=point_seed(self.seed0, s),
                                 duration=self.duration, cf=self.cf,
                                 overrun_prob=self.overrun_prob,
-                                library=self.library))
+                                library=self.library,
+                                engine=self.engine))
         return out
 
     def to_dict(self) -> Dict[str, Any]:
@@ -177,6 +196,8 @@ class Sweep:
         d["policies"] = [policy_to_dict(p) for p in self.policies]
         d["kind"] = "sweep"
         d["v"] = SPEC_VERSION
+        if self.engine == "event":        # keep pre-engine spec hashes
+            d.pop("engine")
         return d
 
     def spec_hash(self) -> str:

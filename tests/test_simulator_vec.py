@@ -1,0 +1,248 @@
+"""Vectorized-engine equivalence suite + perf-baseline regression.
+
+The vectorized SoA backend (`core.simulator_vec`) claims bit-exact
+per-run metrics against the event-driven engine — not "close", equal.
+These tests pin that contract across policies, taskset shapes, seeds
+and horizons (hypothesis-driven), pin the RNG identity the vectorized
+release path relies on, the cache-key contract that keeps the two
+engines' campaign caches disjoint, and the committed ``BENCH_sim.json``
+schema that CI's perf-smoke job diffs against.
+"""
+import dataclasses
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Policy, generate_taskset, simulate
+from repro.core.simulator import simulate_batch
+from repro.core.simulator_vec import (VEC_SIM_SEMANTICS_VERSION, _VecBatch,
+                                      simulate_vbatch)
+from repro.experiments.metrics import metrics_row
+from repro.experiments.runner import cached_library
+from repro.experiments.spec import SimPoint, Sweep
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+LIB = cached_library("sim")
+
+POLICIES = [Policy.mesc(), Policy.non_preemptive(), Policy.amc(),
+            dataclasses.replace(Policy.mesc(use_banks=False),
+                                name="mesc-noB"),
+            Policy(preemption="operator", name="lp"),
+            Policy(preemption="none", drop_lo_in_hi=True, name="amc-np")]
+
+
+def both_engines(tasksets, seeds, policy, **kw):
+    ev = [simulate(ts, LIB, policy, seed=s, **kw)
+          for ts, s in zip(tasksets, seeds)]
+    vc = simulate_vbatch(tasksets, LIB, policy, seeds=seeds, **kw)
+    return ev, vc
+
+
+class TestGoldenCorpusEquivalence:
+    """Vec metrics == event metrics on every corpus point, exactly."""
+
+    @pytest.mark.parametrize("policy", POLICIES, ids=lambda p: p.name)
+    def test_policy_corpus_exact(self, policy):
+        tasksets, seeds = [], []
+        for u in (0.6, 0.95):
+            for s in range(3):
+                tasksets.append(generate_taskset(
+                    u, seed=s, n_tasks=6, programs=LIB))
+                seeds.append(s)
+        ev, vc = both_engines(tasksets, seeds, policy, duration=6e6)
+        for i, (a, b) in enumerate(zip(ev, vc)):
+            assert metrics_row(a) == metrics_row(b), \
+                f"{policy.name} point {i} diverged"
+
+    def test_per_event_lists_exact(self):
+        """Not just aggregates: the raw per-event metric lists (blocking
+        intervals, save/restore breakdowns) match element for element."""
+        tasksets = [generate_taskset(0.9, seed=s, n_tasks=8, programs=LIB)
+                    for s in range(3)]
+        ev, vc = both_engines(tasksets, [0, 1, 2], Policy.mesc(),
+                              duration=2e7)
+        for a, b in zip(ev, vc):
+            assert a.pi_blocking == b.pi_blocking
+            assert a.ci_blocking == b.ci_blocking
+            assert a.save_cycles == b.save_cycles
+            assert a.restore_cycles == b.restore_cycles
+            assert a.mode_cycles == b.mode_cycles
+            assert a.exec_cycles == b.exec_cycles
+            assert a.overhead_cycles == b.overhead_cycles
+
+    def test_mixed_taskset_sizes_one_batch(self):
+        """Padding: one lockstep batch with heterogeneous n_tasks."""
+        sizes = [3, 10, 6, 13]
+        tasksets = [generate_taskset(0.8, seed=s, n_tasks=n, programs=LIB)
+                    for s, n in enumerate(sizes)]
+        ev, vc = both_engines(tasksets, list(range(len(sizes))),
+                              Policy.mesc(), duration=8e6)
+        for a, b in zip(ev, vc):
+            assert metrics_row(a) == metrics_row(b)
+
+    def test_matches_simulate_batch(self):
+        """Drop-in for the serial batch entry point."""
+        tasksets = [generate_taskset(0.7, seed=s, programs=LIB)
+                    for s in range(2)]
+        serial = simulate_batch(tasksets, LIB, Policy.mesc(),
+                                seeds=[0, 1], duration=4e6)
+        vec = simulate_vbatch(tasksets, LIB, Policy.mesc(),
+                              seeds=[0, 1], duration=4e6)
+        for a, b in zip(serial, vec):
+            assert metrics_row(a) == metrics_row(b)
+
+    @settings(max_examples=12, deadline=None)
+    @given(u=st.floats(0.3, 1.1), gamma=st.floats(0.1, 0.9),
+           n_tasks=st.integers(2, 12), seed=st.integers(0, 10_000),
+           pol_idx=st.integers(0, len(POLICIES) - 1),
+           overrun=st.floats(0.0, 0.9), cf=st.floats(1.1, 3.0))
+    def test_random_point_exact(self, u, gamma, n_tasks, seed, pol_idx,
+                                overrun, cf):
+        policy = POLICIES[pol_idx]
+        tasks = generate_taskset(u, gamma=gamma, n_tasks=n_tasks, cf=cf,
+                                 seed=seed, programs=LIB)
+        ev = simulate(tasks, LIB, policy, duration=4e6, seed=seed,
+                      overrun_prob=overrun, cf=cf)
+        vc = simulate_vbatch([tasks], LIB, policy, seeds=[seed],
+                             duration=4e6, overrun_prob=overrun, cf=cf)[0]
+        assert metrics_row(ev) == metrics_row(vc)
+
+
+class TestEngineInternals:
+    def test_uniform_decomposition_identity(self):
+        """The vectorized release path draws demands as
+        ``a + (b - a) * rng.random()``; pin that this is bit-identical
+        to ``rng.uniform(a, b)`` for numpy's Generator."""
+        for seed in range(50):
+            r1, r2 = (np.random.default_rng(seed) for _ in range(2))
+            for a, b in ((0.7, 1.0), (1.0, 2.0), (1.0, 1.8)):
+                assert r1.uniform(a, b) == a + (b - a) * r2.random()
+
+    def test_incremental_aggregates_consistent(self):
+        """The engine's O(1) scheduler aggregates (locked banks, active
+        counts, min-priority keys, resident-LO count) must equal a from-
+        scratch recomputation of the final state."""
+        tasksets = [generate_taskset(0.9, seed=s, n_tasks=8, programs=LIB)
+                    for s in range(4)]
+        batch = _VecBatch(tasksets, LIB, Policy.mesc(),
+                          seeds=[0, 1, 2, 3], duration=1e7,
+                          overrun_prob=0.3, cf=2.0)
+        batch.run()
+        bb = 32 * 1024
+        locked = ((batch.r_bytes + bb - 1) // bb).sum(axis=1)
+        np.testing.assert_array_equal(batch.locked, locked)
+        active = (batch.status != 0) & batch.valid
+        np.testing.assert_array_equal(batch.act_cnt, active.sum(axis=1))
+        np.testing.assert_array_equal(
+            batch.hi_cnt, (active & batch.is_hi).sum(axis=1))
+        res_lo = ((batch.r_bytes > 0) & ~batch.is_hi
+                  & batch.valid).sum(axis=1)
+        np.testing.assert_array_equal(batch.res_lo_cnt, res_lo)
+
+    def test_jax_select_matches_numpy(self):
+        """The optional jax.vmap candidate-reduction step (the fixed-
+        shape inner step) selects identical events."""
+        jax = pytest.importorskip("jax")
+        del jax
+        from repro.core.simulator_vec import _jax_select
+        select = _jax_select()
+        rng = np.random.default_rng(0)
+        cand = rng.uniform(0, 1e8, size=(32, 4))
+        cand[rng.random(cand.shape) < 0.3] = np.inf
+        j, t = (np.asarray(x) for x in select(cand))
+        np.testing.assert_array_equal(j, np.argmin(cand, axis=1))
+        np.testing.assert_array_equal(
+            t, cand[np.arange(len(cand)), np.argmin(cand, axis=1)])
+
+    def test_jax_backend_end_to_end(self):
+        tasks = generate_taskset(0.7, seed=1, n_tasks=4, programs=LIB)
+        a = simulate_vbatch([tasks], LIB, Policy.mesc(), seeds=[1],
+                            duration=1e6)[0]
+        b = simulate_vbatch([tasks], LIB, Policy.mesc(), seeds=[1],
+                            duration=1e6, select_backend="jax")[0]
+        assert metrics_row(a) == metrics_row(b)
+
+
+class TestCacheContract:
+    """Vec points are salted; event points keep their pre-change keys."""
+
+    def _point(self, engine):
+        sweep = Sweep(name="t", policies=(Policy.mesc(),), n_sets=1,
+                      duration=1e6, engine=engine)
+        return sweep.points()[0]
+
+    def test_event_point_dict_has_no_engine_key(self):
+        d = self._point("event").to_dict()
+        assert "engine" not in d
+        assert "vec_sim_v" not in d
+
+    def test_vec_point_salted(self):
+        d = self._point("vec").to_dict()
+        assert d["engine"] == "vec"
+        assert d["vec_sim_v"] == VEC_SIM_SEMANTICS_VERSION
+
+    def test_keys_disjoint_across_engines(self):
+        assert self._point("event").key() != self._point("vec").key()
+
+    def test_event_spec_hash_unchanged_by_engine_field(self):
+        """Sweep spec hashes for event sweeps must not move (manifests
+        keep resolving), and SimPoint round-trips the engine field."""
+        sweep = Sweep(name="t", policies=(Policy.mesc(),), n_sets=1,
+                      duration=1e6)
+        assert "engine" not in sweep.to_dict()
+        p = self._point("vec")
+        assert SimPoint.from_dict(p.to_dict()) == p
+
+    def test_vec_campaign_caches_per_point(self, tmp_path):
+        from repro.experiments import Campaign
+        sweep = Sweep(name="t", policies=(Policy.mesc(),), n_sets=3,
+                      duration=1e6, engine="vec")
+        c1 = Campaign(sweep, cache_dir=tmp_path, workers=1)
+        rows1 = c1.collect()
+        assert c1.stats == {"hits": 0, "misses": 3}
+        c2 = Campaign(sweep, cache_dir=tmp_path, workers=1)
+        rows2 = c2.collect()
+        assert c2.stats == {"hits": 3, "misses": 0}
+        assert rows1 == rows2
+        # same sweep on the event engine: different namespace -> misses,
+        # but identical simulated metrics (the exactness contract)
+        ev = Campaign(dataclasses.replace(sweep, engine="event"),
+                      cache_dir=tmp_path, workers=1)
+        rows_ev = ev.collect()
+        assert ev.stats == {"hits": 0, "misses": 3}
+        assert rows_ev == rows1
+
+
+class TestBenchBaseline:
+    """BENCH_sim.json is the committed perf trajectory: schema-stable
+    and in sync with the harness."""
+
+    def test_committed_baseline_schema(self):
+        doc = json.loads((REPO_ROOT / "BENCH_sim.json").read_text())
+        assert doc["schema_version"] == 1
+        full = doc["sections"]["full"]
+        assert full["corpus"]["points"] == 512
+        assert full["corpus"]["style"] == "fig8"
+        for eng in ("event", "vec"):
+            block = full["engines"][eng]
+            assert block["points_per_sec"] > 0
+            assert block["seconds"] > 0
+        assert full["speedup_vec_vs_event"] > 1.0
+        assert full["mismatched_points"] == 0
+
+    def test_perf_sim_smoke_runs_in_budget(self):
+        """The CI perf-smoke measurement completes quickly and the two
+        engines agree on every smoke-corpus point."""
+        import time
+        from benchmarks.perf_sim import SMOKE, measure
+        t0 = time.time()
+        result = measure(SMOKE)
+        assert time.time() - t0 < 120          # CI time budget
+        assert result["mismatched_points"] == 0
+        assert set(result["engines"]) == {"event", "vec"}
+        for eng in result["engines"].values():
+            assert eng["points_per_sec"] > 0
