@@ -7,15 +7,17 @@ pure cache replay.  Prints ``name,us_per_call,derived`` CSV summary
 lines (plus the per-figure CSV blocks above them).
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--only fig7,fig8]
-        [--engine event|vec] [--workers N] [--cache-dir DIR] [--no-cache]
-        [--smoke]
+        [--engine event|vec|jit] [--workers N] [--cache-dir DIR]
+        [--no-cache] [--smoke]
 
 ``--full`` uses the paper's 1000 task sets per point (slow); default is
 a statistically-meaningful reduction.  ``--engine vec`` routes the
 single-accelerator simulation sweeps through the vectorized batch
-backend (``core.simulator_vec``; separate cache namespace, see
-docs/performance.md).  ``--smoke`` runs a 2-point sweep end-to-end
-(used by CI).
+backend (``core.simulator_vec``); ``--engine jit`` through the fully-
+compiled ``jax.lax.while_loop`` backend (``core.simulator_jit``,
+statistically equivalent RNG contract).  Each engine has its own cache
+namespace, see docs/performance.md.  ``--smoke`` runs a 2-point sweep
+end-to-end (used by CI).
 """
 from __future__ import annotations
 
@@ -56,9 +58,11 @@ def main() -> None:
                     help="always re-simulate; write nothing to disk")
     ap.add_argument("--smoke", action="store_true",
                     help="run a tiny 2-point campaign and exit (CI)")
-    ap.add_argument("--engine", default="event", choices=("event", "vec"),
+    ap.add_argument("--engine", default="event",
+                    choices=("event", "vec", "jit"),
                     help="simulation backend for the sim sweeps "
-                         "(vec = vectorized batch engine)")
+                         "(vec = vectorized batch engine, jit = fully-"
+                         "compiled jax.lax.while_loop backend)")
     args = ap.parse_args()
     campaign_kw = dict(workers=args.workers, cache_dir=args.cache_dir,
                        use_cache=not args.no_cache)

@@ -35,7 +35,7 @@ import dataclasses
 import enum
 import heapq
 from heapq import heappush
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Union
 
 import numpy as np
 
@@ -77,12 +77,51 @@ _OVERRUN = int(EventKind.OVERRUN)
 _TICK = int(EventKind.TICK)
 
 
+class AggSamples:
+    """Sum/count aggregate standing in for a per-event sample list.
+
+    The jit lockstep backend (``core.simulator_jit``) accumulates
+    blocking/save/restore statistics on-device as ``(total, n)`` pairs
+    instead of materializing unbounded per-event lists; RunMetrics
+    fields typed ``List[float]`` may hold one of these instead.
+    ``metrics_row`` consumes either form — the totals are accumulated
+    in event order, so on a trajectory identical to the NumPy engine's
+    the flattened row is bit-identical too.
+    """
+    __slots__ = ("total", "n")
+
+    def __init__(self, total: float, n: int):
+        self.total = float(total)
+        self.n = int(n)
+
+    def __len__(self) -> int:
+        return self.n
+
+    def __eq__(self, other) -> bool:
+        return (isinstance(other, AggSamples)
+                and self.total == other.total and self.n == other.n)
+
+    def __iter__(self):
+        raise TypeError(
+            "AggSamples is a sum/count aggregate, not a sample list — "
+            "read .total/.n (or go through metrics_row); the jit "
+            "backend does not materialize per-event samples")
+
+    def __repr__(self) -> str:
+        return f"AggSamples(total={self.total!r}, n={self.n})"
+
+
+# per-event sample lists, or AggSamples when the producing engine
+# (core.simulator_jit) carries aggregates instead
+Samples = Union[List[float], AggSamples]
+
+
 @dataclasses.dataclass
 class RunMetrics:
-    pi_blocking: List[float] = dataclasses.field(default_factory=list)
-    ci_blocking: List[float] = dataclasses.field(default_factory=list)
-    save_cycles: List[float] = dataclasses.field(default_factory=list)
-    restore_cycles: List[float] = dataclasses.field(default_factory=list)
+    pi_blocking: Samples = dataclasses.field(default_factory=list)
+    ci_blocking: Samples = dataclasses.field(default_factory=list)
+    save_cycles: Samples = dataclasses.field(default_factory=list)
+    restore_cycles: Samples = dataclasses.field(default_factory=list)
     jobs: Dict[str, int] = dataclasses.field(
         default_factory=lambda: {"LO": 0, "HI": 0})
     done: Dict[str, int] = dataclasses.field(

@@ -1,0 +1,1051 @@
+"""Fully-compiled lockstep simulation backend (``select_backend="jit"``).
+
+This module compiles the *entire* lockstep step of the vectorized
+engine — candidate min/argmin, every masked event handler (release,
+scheduler tick, pending finish/overrun interrupt), the scheduler pass
+(mode progression, pick_next, blocking bookkeeping) and the full
+context-switch cost model — into one pure ``(carry) -> (carry)``
+function under ``jax.jit`` + ``jax.lax.while_loop``.  The host submits
+one XLA computation per batch and only observes the final state: the
+"streaming accelerator executes the schedule, host only observes"
+structure MESC itself argues for.  This removes the NumPy engine's
+fixed per-step host-call budget (~300 NumPy calls per lockstep
+iteration) that capped campaign throughput regardless of batch width.
+
+RNG-equivalence contract
+------------------------
+The event/NumPy engines draw demands from sequential per-point
+``np.random.Generator`` streams whose call count is data-dependent —
+host RNG inside the loop, the exact structure a compiled loop cannot
+replicate.  The jit backend replaces those with *counter-based* draws:
+a splitmix64 hash of ``(seed, task, release_index)`` yields the two
+uniforms of each accepted release (``jax.random.fold_in``'s threefry
+would be semantically equivalent but costs ~50 extra kernels per
+lockstep step on CPU).  Consequences:
+
+  * **statistical equivalence** under demand jitter: same release
+    phases (still drawn host-side from the point's ``default_rng(seed)``
+    in the NumPy engine's order), identical demand *distributions*, but
+    different demand *realizations* — per-point trajectories diverge
+    while every corpus-level statistic (success rates, blocking, mode
+    residency) agrees within sampling error.  Pinned by
+    ``tests/test_simulator_jit.py`` and gated in CI;
+  * **exact equivalence** on the degenerate zero-jitter profile
+    (``demand_profile="nominal"``: demand == C_LO, no in-loop draws
+    exist): metrics match the NumPy vec engine bit-for-bit, pinned per
+    run and gated in CI.
+
+``JIT_SIM_SEMANTICS_VERSION`` salts campaign cache keys for jit points
+(``repro.experiments.spec``), so jit results never collide with event-
+or vec-engine cache entries.
+
+Implementation notes
+--------------------
+  * All per-point state lives in a flat dict-of-``jnp``-array carry;
+    static per-batch tables (priorities, periods, program boundary
+    tables) are traced arguments, so one compilation serves every batch
+    of the same shape/policy class.
+  * The pending finish/overrun interrupt table is fixed-width (XLA
+    needs static shapes).  A push into a full table sets a per-point
+    overflow flag; the affected points are re-run in small padded
+    sub-batches at doubled widths (``_run_chunk``) — counter-based RNG
+    makes every retry bit-deterministic and results independent of
+    batch composition.
+  * Scheduler aggregates (active/HI counts, locked banks, resident-LO
+    counts) ride in the carry and are updated incrementally at the
+    NumPy engine's sites; pick_next keys are rank-compressed int32.
+  * Chunks are streamed from a small host thread pool
+    (``default_streams``, ``REPRO_JIT_STREAMS``): the compiled loop
+    releases the GIL, so independent chunks overlap on separate cores
+    — something the host-call-bound Python engines cannot do.
+  * Everything runs in float64/int64 under ``jax.experimental
+    .enable_x64`` (scoped, not process-global): event times must not
+    round-trip through float32.
+
+JAX is an optional dependency of this module: importing it (and
+``core.simulator_vec``) works without JAX installed; selecting the
+backend then raises a ``RuntimeError`` naming the fix.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from concurrent.futures import ThreadPoolExecutor
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+try:  # optional dependency — guarded so module import never fails
+    import jax
+    import jax.numpy as jnp
+except ImportError:  # pragma: no cover - exercised via monkeypatch test
+    jax = None
+    jnp = None
+
+from repro.core.isa import (ACCUM_BYTES, DMA_BYTES_PER_CYCLE,
+                            DMA_SETUP_CYCLES, FLUSH_CYCLES)
+from repro.core.program import Program
+from repro.core.scheduler import Policy
+from repro.core.simulator import AggSamples, RunMetrics
+from repro.core.simulator_vec import (_BB, _C_CI, _C_CIQ, _C_NONE, _C_PI,
+                                      _CAP, _CFG_CY, _FF, _HI, _INT,
+                                      _LO, _MODE_KEYS, _NBANKS, _PEND,
+                                      _PID_KEY, _READY, _REMAP_CY,
+                                      _RESTORE_FIXED, _RUN, _TRANS,
+                                      _VecBatch)
+# the jit cache salt lives in (jax-free) simulator_vec so the
+# experiments/spec layer can hash points without importing JAX;
+# re-exported here as the canonical name
+from repro.core.simulator_vec import JIT_SIM_SEMANTICS_VERSION  # noqa: F401
+from repro.core.task import TaskParams
+
+# pending-interrupt table: primary width, the give-up bound for the
+# host-side double-on-overflow retry ladder, and the padded sub-batch
+# size retries are grouped into (bounds compilation variants).  The
+# NumPy engine's on-demand table settles at 32-64 on the reference
+# corpora, so starting at 64 makes the retry the rare path.
+_K0 = 64
+_K_MAX = 1024
+_RETRY_BUCKET = 64
+
+# lockstep width per compiled chunk: small enough to stay
+# cache-resident and to give the stream threads work to overlap,
+# large enough to amortize per-step fixed cost (measured optimum on
+# the 512-point BENCH corpus)
+_STREAM_CHUNK = 64
+
+# "no eligible task" sentinel for the rank-compressed int32 pick_next
+# keys (every real key is rank * (T+1) + column << 2**30)
+_EMPTY32 = 2 ** 30
+
+# Packed per-point metric layouts: one int32 counter array ``mi`` and
+# one float64 accumulator array ``mf`` in the carry, each updated by a
+# single fused add-chain per step (one XLA kernel instead of ~15).
+# int counters: [jobs_lo, jobs_hi, done_lo, done_hi, miss_lo, miss_hi,
+#                mbm_lo, mbm_tr, mbm_hi, lo_rel_hi, lo_done_hi,
+#                cs_count, pi_n, ci_n, save_n, restore_n]
+_MI_JOBS, _MI_DONE, _MI_MISS, _MI_MBM = 0, 2, 4, 6
+_MI_LO_REL, _MI_LO_DONE, _MI_CS = 9, 10, 11
+_MI_PI_N, _MI_CI_N, _MI_SAVE_N, _MI_RESTORE_N = 12, 13, 14, 15
+_MI_W = 16
+# float accumulators: [exec_sum, overhead, pi_sum, ci_sum, save_sum,
+#                      restore_sum, mode_cycles_lo/tr/hi]
+_MF_EXEC, _MF_OVERHEAD, _MF_PI, _MF_CI = 0, 1, 2, 3
+_MF_SAVE, _MF_RESTORE, _MF_MC = 4, 5, 6
+_MF_W = 9
+
+
+def require_jax(backend: str = "jit") -> None:
+    """Fail fast with an actionable message when JAX is unavailable."""
+    if jax is None:
+        raise RuntimeError(
+            f"select_backend={backend!r} needs JAX, which is not "
+            "importable in this environment; install jax (CPU wheels: "
+            "`pip install jax`) or use select_backend='numpy'")
+
+
+# ----------------------------------------------------------------------
+# Compiled step (built once per static policy/profile class)
+# ----------------------------------------------------------------------
+
+def _build_run(use_banks: bool, drop_lo: bool, preempt: str,
+               nominal: bool):
+    """Compile the whole-simulation while_loop for one static config.
+
+    Everything dynamic (per-batch tables, scalars, carry) is a traced
+    argument; jax re-specializes per array shape, so batches sharing
+    (n_points, n_tasks, K, table sizes) share one compilation.
+
+    XLA:CPU pays a ~flat dispatch cost per emitted kernel inside a
+    while_loop, so the body is shaped to minimize *kernel count*, not
+    flops:
+
+      * per-point single-column reads are gathers (cheap); every
+        (P, T) state array receives exactly ONE fused where-chain
+        write per step (XLA CPU scatters are pathologically slow, and
+        one chain beats four separate masked writes);
+      * deferring all writes to the end of the step is sound because
+        the four event classes are disjoint per point and handlers
+        only touch their own point's row — the few same-row
+        read-after-write hazards (advance -> dispatch, finish ->
+        scheduler) are resolved by deriving the post-write values as
+        (P,)-scalars instead of re-reading the array;
+      * metric counters live in two packed arrays (``mi`` int32,
+        ``mf`` float64) updated by one fused add-chain each;
+      * the demand draw is a branch-free splitmix64 hash (a handful of
+        fused u64 ops; ``jax.random``'s threefry costs ~50 kernels per
+        step on CPU).
+    """
+
+    GOLD = np.uint64(0x9E3779B97F4A7C15)
+
+    def _mix64(x):
+        """splitmix64 finalizer — the counter-based RNG's mixer."""
+        x = (x ^ (x >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+        x = (x ^ (x >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+        return x ^ (x >> np.uint64(31))
+
+    def _u01(bits):
+        """Top 53 bits -> uniform double in [0, 1)."""
+        return (bits >> np.uint64(11)).astype(jnp.float64) \
+            * (1.0 / (1 << 53))
+
+    def _oh(col, width):
+        return col[:, None] == jnp.arange(width)[None, :]
+
+    def _get(arr, col):
+        """arr[p, col[p]] (clamped columns; callers mask the result)."""
+        return jnp.take_along_axis(arr, col[:, None], axis=1)[:, 0]
+
+    def _chain(arr, *writes):
+        """One fused masked-write pass: ``writes`` are (oh, mask, val)
+        triples applied lowest-precedence-first (later entries win on
+        overlap, matching the sequential write order they replace)."""
+        out = arr
+        for oh, mask, val in writes:
+            val = jnp.asarray(val, arr.dtype)
+            if val.ndim:
+                val = val[:, None]
+            out = jnp.where(oh & mask[:, None], val, out)
+        return out
+
+    def _apply_inc(M, incs):
+        """One fused add-chain over a packed metric array; ``incs`` are
+        (column, mask, value) with scalar or per-point columns."""
+        cols = jnp.arange(M.shape[1])
+        out = M
+        for idx, mask, val in incs:
+            idx = jnp.asarray(idx)
+            if idx.ndim:
+                ohm = (idx[:, None] == cols[None, :]) & mask[:, None]
+            else:
+                ohm = (cols == idx)[None, :] & mask[:, None]
+            val = jnp.asarray(val, M.dtype)
+            if val.ndim:
+                val = val[:, None]
+            out = out + jnp.where(ohm, val, jnp.zeros((), M.dtype))
+        return out
+
+    def _dma(nbytes):
+        cy = DMA_SETUP_CYCLES + (nbytes + DMA_BYTES_PER_CYCLE - 1) \
+            // DMA_BYTES_PER_CYCLE
+        return jnp.where(nbytes <= 0, 0, cy)
+
+    def _banks(nbytes):
+        return (nbytes + _BB - 1) // _BB
+
+    def _boundaries(tb, pids, off):
+        """Vectorized Program.next_{instruction,operator}_boundary via
+        one searchsorted over the globally keyed tables (identical
+        float/int op order to the NumPy engine's ``_boundaries``)."""
+        total = tb["prog_total"][pids]
+        wrap = off >= total
+        base = jnp.where(wrap,
+                         jnp.floor_divide(off, total) * total, 0.0)
+        off = off - base
+        pk = pids.astype(jnp.float64) * float(_PID_KEY)
+        # searchsorted as a broadcast compare+count: the tables are a
+        # few hundred entries, and one dense pass beats the unrolled
+        # binary search's serial gather chain on CPU
+        if preempt == "instruction":
+            off = jnp.minimum(jnp.maximum(off, 0.0), total - 1e-9)
+            q = pk + off
+            i = (tb["seg_key"][None, :] <= q[:, None]).sum(axis=1)
+            seg_start = (tb["seg_key"][i] - pk) - tb["seg_cycles"][i]
+            within = off - seg_start
+            pat = tb["seg_pat"][i]
+            rep = jnp.floor_divide(within, pat)
+            rem = within - rep * pat
+            cum = tb["pat_cumsum"][i]
+            k = (cum <= rem[:, None]).sum(axis=1)
+            acc = _get(cum, k)
+            return jnp.trunc(base + seg_start + rep * pat + acc)
+        q = pk + off
+        i = (tb["op_key"][None, :] <= q[:, None]).sum(axis=1)
+        i = jnp.minimum(i, tb["op_hi"][pids])
+        return jnp.trunc(base + tb["op_end"][i])
+
+    def _sample_demand(tb, sc, rcol, n, hi_r, c_lo_r):
+        """Counter-based per-release demand draw: splitmix64 of
+        (seed, task, release index) — identical distributions to the
+        sequential-stream engines, but order-free so the compiled loop
+        needs no host RNG state (see the module docstring)."""
+        ctr = (rcol.astype(jnp.uint64) << np.uint64(33)) \
+            + (n.astype(jnp.uint64) << np.uint64(1))
+        s = tb["seed64"] + ctr * GOLD
+        u0 = _u01(_mix64(s))
+        u1 = _u01(_mix64(s + GOLD))
+        over = hi_r & (u0 < sc["overrun_prob"])
+        mag = jnp.where(over, 1.0 + (sc["cf"] - 1.0) * u1,
+                        0.7 + 0.3 * u1)
+        return c_lo_r * mag
+
+    # ------------------------------------------------------------------
+    def _step(tb, sc, c):
+        """One lockstep iteration: pop each live point's next event and
+        apply the handlers as masked updates — the jit counterpart of
+        ``_VecBatch.run``'s loop body, one event class per point.  The
+        scheduler aggregates (locked banks, resident-LO / active / HI
+        counts) ride in the carry and are updated incrementally at the
+        NumPy engine's sites; every (P, T) array is written once, at
+        the end (see ``_build_run``)."""
+        T = tb["valid"].shape[1]
+        K = c["ev_time"].shape[1]
+        next_tick = lambda t: (jnp.floor_divide(t, sc["t_sr"]) + 1) \
+            * sc["t_sr"]
+        mi_inc, mf_inc = [], []
+
+        # ---- candidate argmin over the four event sources ------------
+        rel_min = c["next_release"].min(axis=1)
+        tickR_min = c["tick_release"].min(axis=1)
+        ev_min = c["ev_time"].min(axis=1)
+        cand = jnp.stack([rel_min, tickR_min, ev_min, c["tick_cs"]],
+                         axis=1)
+        j = jnp.argmin(cand, axis=1)
+        tmin = cand.min(axis=1)
+        fire = c["alive"] & (tmin <= sc["duration"])
+        c["alive"] = fire            # non-firing points are done forever
+        now = jnp.where(fire, tmin, c["now"])
+        c["now"] = now
+        is_rel = fire & (j == 0)
+        is_tickR = fire & (j == 1)
+        is_cs = fire & (j == 3)
+        is_int = fire & (j == 2)
+
+        # ---- release events (no scheduler pass of their own) ---------
+        rcol = jnp.argmin(c["next_release"], axis=1)
+        ohR = _oh(rcol, T)
+        st_r = _get(c["status"], rcol)
+        hi_r = _get(tb["is_hi"], rcol)
+        crit_r = hi_r.astype(jnp.int32)
+        # previous job still live: count one miss, skip this release
+        fresh_miss = is_rel & (st_r != _PEND) \
+            & (_get(c["job_deadline"], rcol) != jnp.inf)
+        mi_inc.append((_MI_MISS + crit_r, fresh_miss, 1))
+        mi_inc.append((_MI_MBM + c["mode"], fresh_miss, 1))
+        accept = is_rel & (st_r == _PEND)
+        if drop_lo:                   # AMC: LO not released off-LO
+            accept = accept & (hi_r | (c["mode"] == _LO))
+        c["act_cnt"] = c["act_cnt"] + accept
+        c["hi_cnt"] = c["hi_cnt"] + (accept & hi_r)
+        c_lo_r = _get(tb["c_lo"], rcol)
+        if nominal:                   # zero-jitter profile: no draws
+            dem = c_lo_r
+        else:
+            n_r = _get(c["rel_cnt"], rcol)
+            dem = _sample_demand(tb, sc, rcol, n_r, hi_r, c_lo_r)
+            c["rel_cnt"] = _chain(c["rel_cnt"], (ohR, accept, n_r + 1))
+        mi_inc.append((_MI_JOBS + crit_r, accept, 1))
+        rel_hi = accept & ~hi_r & (c["mode"] != _LO)
+        mi_inc.append((_MI_LO_REL, rel_hi, 1))
+
+        # ---- scheduler-tick pops (defer while a CS is in flight) -----
+        ohT = _oh(jnp.argmin(c["tick_release"], axis=1), T)
+        c["tick_cs"] = jnp.where(is_cs, jnp.inf, c["tick_cs"])
+        tick_mask = is_tickR | is_cs
+        busy_t = tick_mask & (now < c["accel_free_at"])
+        c["tick_cs"] = jnp.where(
+            busy_t, jnp.minimum(c["tick_cs"],
+                                next_tick(c["accel_free_at"])),
+            c["tick_cs"])
+        tick_sched = tick_mask & ~busy_t
+
+        # ---- pending finish/overrun interrupts: pop + guard ----------
+        icol = jnp.argmin(c["ev_time"], axis=1)
+        ohI = _oh(icol, K)
+        itid = _get(c["ev_tid"], icol)
+        ikind = _get(c["ev_kind"], icol)
+        tidc = jnp.maximum(itid, 0)
+        ohTid = _oh(tidc, T)
+        guard = is_int & (c["running"] == itid) \
+            & (_get(c["status"], tidc) == _RUN)
+
+        # ---- one advance for every point that needs it this step -----
+        # (the running column is shared by the advance, the interrupt
+        # target and the dispatch drain, so the post-advance values are
+        # carried forward as scalars instead of array re-reads)
+        runc = jnp.maximum(c["running"], 0)
+        ohRun = _oh(runc, T)
+        elapsed = now - c["run_started"]
+        do_adv = (guard | tick_sched) & (c["running"] >= 0) \
+            & (elapsed > 0)
+        exec_r0 = _get(c["exec_cy"], runc)
+        exec_r1 = jnp.where(do_adv, exec_r0 + elapsed, exec_r0)
+        mf_inc.append((_MF_EXEC, do_adv, elapsed))
+        c["run_started"] = jnp.where(do_adv, now, c["run_started"])
+        # GemminiRT.note_execution (exact integer growth model)
+        etab_r = _get(tb["etab"], runc).astype(jnp.int64) * _BB
+        grow = jnp.floor(elapsed * DMA_BYTES_PER_CYCLE).astype(jnp.int64)
+        if use_banks:
+            have = _get(c["r_bytes"], runc).astype(jnp.int64)
+            free = (_NBANKS - c["locked"]).astype(jnp.int64)
+            growing = do_adv & (have < etab_r) & (free > 0)
+            want = jnp.minimum(jnp.minimum(etab_r, have + free * _BB),
+                               have + grow)
+            rb_grown = jnp.maximum(have, want)
+            rb_1 = jnp.where(growing, rb_grown, have)
+            c["locked"] = c["locked"] + jnp.where(
+                growing, _banks(rb_grown) - _banks(have), 0).astype(
+                    jnp.int32)
+            went = growing & (have == 0) & (rb_grown > 0) \
+                & ~_get(tb["is_hi"], runc)
+            c["res_lo"] = c["res_lo"] + went
+        else:
+            have = _get(c["spad"], runc).astype(jnp.int64)
+            growing = do_adv & (have < etab_r)
+            others = c["spad"].sum(axis=1) - have
+            want = jnp.minimum(
+                jnp.minimum(etab_r, jnp.maximum(_CAP - others, 0)),
+                have + grow)
+            rb_1 = jnp.where(growing, jnp.maximum(have, want), have)
+        acc_r0 = _get(c["acc_bytes"], runc).astype(jnp.int64)
+        filling = do_adv & (acc_r0 < ACCUM_BYTES)
+        grow_acc = jnp.floor_divide(
+            elapsed * DMA_BYTES_PER_CYCLE, 4).astype(jnp.int64)
+        acc_1 = jnp.where(filling,
+                          jnp.minimum(ACCUM_BYTES, acc_r0 + grow_acc),
+                          acc_r0)
+
+        # ---- fire guard-passing finish/overrun events ----------------
+        # (the interrupt target IS the running column for guard-passing
+        # points, so exec_r1 / rb_1 are its post-advance values)
+        done_m = guard & (ikind == 1) \
+            & (exec_r1 >= _get(c["demand"], tidc) - 1e-6)
+        hi_i = _get(tb["is_hi"], tidc)
+        crit_i = hi_i.astype(jnp.int32)
+        ddl_i = _get(c["job_deadline"], tidc)
+        mi_inc.append((_MI_DONE + crit_i, done_m, 1))
+        late = done_m & (now > ddl_i)
+        mi_inc.append((_MI_MISS + crit_i, late, 1))
+        mi_inc.append((_MI_MBM + c["mode"], late, 1))
+        surv = done_m & _get(c["released_in_hi"], tidc) & (now <= ddl_i)
+        mi_inc.append((_MI_LO_DONE, surv, 1))
+        c["act_cnt"] = c["act_cnt"] - done_m
+        c["hi_cnt"] = c["hi_cnt"] - (done_m & hi_i)
+        # GemminiRT.evict
+        mf_inc.append((_MF_OVERHEAD, done_m, float(FLUSH_CYCLES)))
+        if use_banks:
+            c["locked"] = c["locked"] - jnp.where(
+                done_m, _banks(rb_1), 0).astype(jnp.int32)
+            c["res_lo"] = c["res_lo"] - (done_m & (rb_1 > 0) & ~hi_i)
+        c["running"] = jnp.where(done_m, -1, c["running"])
+        # overrun: flag the budget excess, degrade LO -> transition
+        fire_o = guard & (ikind == 2) \
+            & (exec_r1 >= _get(tb["c_lo"], tidc) - 1e-6) \
+            & ~_get(c["budget_overrun"], tidc)
+        was_lo = fire_o & (c["mode"] == _LO)
+        mf_inc.append((_MF_MC + c["mode"], was_lo,
+                       now - c["last_mode_stamp"]))
+        c["last_mode_stamp"] = jnp.where(was_lo, now,
+                                         c["last_mode_stamp"])
+        c["mode"] = jnp.where(was_lo, _TRANS, c["mode"])
+
+        # ---- scheduler pass ------------------------------------------
+        sched = tick_sched | done_m | fire_o
+        # a stale event can land mid-switch: defer like a tick re-push
+        busy_s = sched & (now < c["accel_free_at"])
+        c["tick_cs"] = jnp.where(
+            busy_s, jnp.minimum(c["tick_cs"],
+                                next_tick(c["accel_free_at"])),
+            c["tick_cs"])
+        sched = sched & ~busy_s
+        # mode progression (SS IV) off the carried aggregates
+        mt = sched & (c["mode"] != _LO)
+        to_hi = mt & (c["mode"] == _TRANS) & (c["res_lo"] <= 1)
+        to_lo = mt & ~to_hi & (c["act_cnt"] == 0)
+        new_mode = jnp.where(to_hi, _HI,
+                             jnp.where(to_lo, _LO, c["mode"]))
+        chg = new_mode != c["mode"]
+        mf_inc.append((_MF_MC + c["mode"], chg,
+                       now - c["last_mode_stamp"]))
+        c["last_mode_stamp"] = jnp.where(chg, now,
+                                         c["last_mode_stamp"])
+        c["mode"] = new_mode
+        # pick_next via masked min over the rank-compressed
+        # (priority, column) keys; the finishing task left the active
+        # set this step, which the deferred status write hasn't
+        # recorded yet — mask its column out here
+        active = (c["status"] != _PEND) & tb["valid"] \
+            & ~(ohTid & done_m[:, None])
+        act_key = jnp.where(active, tb["key32"], _EMPTY32).min(axis=1)
+        hi_key = jnp.where(active & tb["is_hi"], tb["key32"],
+                           _EMPTY32).min(axis=1)
+        hi_active = c["hi_cnt"] > 0
+        off_lo = c["mode"] != _LO
+        if drop_lo:                   # AMC: LO never runs off-LO
+            key = jnp.where(off_lo, hi_key, act_key)
+        else:
+            key = jnp.where(off_lo & hi_active, hi_key, act_key)
+            # transition mode: a LO task may run only while its data
+            # is still resident (rare — branch around the extra pass,
+            # correcting for this step's deferred writes)
+            need_tr = sched & off_lo & ~hi_active \
+                & (c["mode"] == _TRANS)
+
+            def _tr_keys(_):
+                resid = c["data_in_accel"] | (c["r_bytes"] > 0)
+                resid = resid & ~(ohTid & done_m[:, None])
+                if use_banks:
+                    resid = resid | (ohRun
+                                     & (growing & (rb_grown > 0))[:, None])
+                ok = active & (tb["is_hi"] | resid)
+                return jnp.where(ok, tb["key32"], _EMPTY32).min(axis=1)
+
+            key_tr = jax.lax.cond(
+                need_tr.any(), _tr_keys,
+                lambda _: jnp.full_like(key, _EMPTY32), None)
+            key = jnp.where(need_tr, key_tr, key)
+        nxt = (key % (T + 1)).astype(jnp.int32)
+        nxt = jnp.where(key >= _EMPTY32, -1, nxt)
+        # clear a stale running slot (event engine's defensive check)
+        cur = c["running"]
+        curc = jnp.maximum(cur, 0)
+        ohC = _oh(curc, T)
+        stale = sched & (cur >= 0) \
+            & (_get(c["status"], curc) != _RUN)
+        c["running"] = jnp.where(stale, -1, c["running"])
+        # ohC / curc stay valid: stale points get cur < 0, for which
+        # every consumer below is masked out — and whenever a dispatch
+        # drains a current task, curc equals runc (the point advanced
+        # the same column this step), so rb_1 / acc_1 / exec_r1 are its
+        # post-advance values
+        cur = c["running"]
+        act_m = sched & (nxt >= 0) & (cur != nxt)
+        # a displaced current task blocks the newcomer until the switch
+        nxtc = jnp.maximum(nxt, 0)
+        ohN = _oh(nxtc, T)
+        hi_n = _get(tb["is_hi"], nxtc)
+        hi_c = _get(tb["is_hi"], curc)
+        blocked = act_m & (cur >= 0)
+        bsince_0 = _get(c["blocked_since"], nxtc)
+        fresh_b = blocked & jnp.isnan(bsince_0)
+        bsince_1 = jnp.where(fresh_b, now, bsince_0)
+        run_lo = (cur >= 0) & ~hi_c
+        ci_shape = hi_n & run_lo
+        cause_v = jnp.where(
+            ci_shape, jnp.where(c["mode"] != _LO, _C_CI, _C_CIQ),
+            _C_PI)
+        cz_1 = jnp.where(fresh_b, cause_v,
+                         _get(c["cause"], nxtc).astype(jnp.int32))
+        if preempt == "none":         # cannot displace the running task
+            act_m = act_m & (cur < 0)
+
+        # ---- dispatch (context switch, Alg. 1) -----------------------
+        has_cur = act_m & (cur >= 0)
+        # drain to the preemption boundary
+        boundary = _boundaries(tb, _get(tb["prog_id"], curc), exec_r1)
+        drain = jnp.maximum(
+            0.0, jnp.minimum(boundary, _get(c["demand"], curc))
+            - exec_r1)
+        exec_r2 = jnp.where(has_cur, exec_r1 + drain, exec_r1)
+        drain_i = jnp.trunc(drain).astype(jnp.int64)
+        # context_save cost model (GemminiRT)
+        acc_cy = _dma(acc_1)
+        if use_banks:
+            need = _get(tb["eta"], nxtc) + c["locked"] > _NBANKS
+            spadsave = need & (rb_1 > 0)
+            remap_cy = _REMAP_CY
+            resident = rb_1
+        else:
+            resident = _get(c["spad"], curc).astype(jnp.int64)
+            resident = jnp.where(curc == runc, rb_1, resident)
+            spadsave = resident > 0
+            remap_cy = 0
+        spad_cy = jnp.where(spadsave, _dma(resident), 0)
+        br_save = drain_i + (_FF + _CFG_CY + remap_cy) + acc_cy + spad_cy
+        kept = ~spadsave
+        sv = has_cur & spadsave
+        # HI-mode LO->LO preemption: full eviction of the old LO data
+        lolo = has_cur & (c["mode"] == _HI) & ~hi_c & ~hi_n
+        if use_banks:
+            c["locked"] = c["locked"] - jnp.where(
+                sv, _banks(resident), 0).astype(jnp.int32)
+            c["res_lo"] = c["res_lo"] - (sv & ~hi_c)
+            # the lolo eviction sees the residency left after the save
+            rb_2 = jnp.where(sv, 0, rb_1)
+            c["locked"] = c["locked"] - jnp.where(
+                lolo, _banks(rb_2), 0).astype(jnp.int32)
+            c["res_lo"] = c["res_lo"] - (lolo & (rb_2 > 0))
+        mi_inc.append((_MI_CS, has_cur, 1))
+        mf_inc.append((_MF_SAVE, has_cur, br_save.astype(jnp.float64)))
+        mi_inc.append((_MI_SAVE_N, has_cur, 1))
+        # context_restore for resumed tasks
+        resume = act_m & ((_get(c["pc"], nxtc) > 0)
+                          | (_get(c["status"], nxtc) == _INT))
+        has_ctx = _get(c["ctx_valid"], nxtc)
+        ctx_acc_n = _get(c["ctx_acc"], nxtc).astype(jnp.int64)
+        ctx_spad_n = _get(c["ctx_spad"], nxtc).astype(jnp.int64)
+        acc_cy_r = jnp.where(has_ctx, _dma(ctx_acc_n), 0)
+        reload = resume & has_ctx & ~_get(c["ctx_kept"], nxtc) \
+            & (ctx_spad_n > 0)
+        spad_cy_r = jnp.where(reload, _dma(ctx_spad_n), 0)
+        br_rest = jnp.where(has_ctx,
+                            acc_cy_r + spad_cy_r + _RESTORE_FIXED, 0)
+        if use_banks:
+            br_rest = br_rest + jnp.where(reload, _REMAP_CY, 0)
+            free_b = (_NBANKS - c["locked"]).astype(jnp.int64)
+            new_res = jnp.minimum(ctx_spad_n, free_b * _BB)
+            c["locked"] = c["locked"] + jnp.where(
+                reload, _banks(new_res), 0).astype(jnp.int32)
+            c["res_lo"] = c["res_lo"] + (reload & (new_res > 0) & ~hi_n)
+        else:
+            new_res = ctx_spad_n
+        mf_inc.append((_MF_RESTORE, resume, br_rest.astype(jnp.float64)))
+        mi_inc.append((_MI_RESTORE_N, resume, 1))
+        # commit the switch
+        switch = jnp.where(has_cur, br_save, 0).astype(jnp.float64) \
+            + jnp.where(resume, br_rest, 0).astype(jnp.float64)
+        mf_inc.append((_MF_OVERHEAD, act_m, switch))
+        c["running"] = jnp.where(act_m, nxt, c["running"])
+        # _record_unblock(nxt, at=now + switch)
+        at = now + switch
+        was_b = act_m & ~jnp.isnan(bsince_1)
+        dt = at - bsince_1
+        cz = jnp.where((cz_1 == _C_CIQ) & (c["mode"] != _LO), _C_CI,
+                       cz_1)
+        posd = was_b & (dt > 0)
+        ci_m = posd & (cz == _C_CI)
+        pi_m = posd & (cz != _C_CI)
+        mf_inc.append((_MF_CI, ci_m, dt))
+        mi_inc.append((_MI_CI_N, ci_m, 1))
+        mf_inc.append((_MF_PI, pi_m, dt))
+        mi_inc.append((_MI_PI_N, pi_m, 1))
+        c["run_started"] = jnp.where(act_m, at, c["run_started"])
+        c["accel_free_at"] = jnp.where(act_m, at, c["accel_free_at"])
+        # future events for the new running task
+        exec_n = _get(c["exec_cy"], nxtc)
+        rem = _get(c["demand"], nxtc) - exec_n
+        c_lo_n = _get(tb["c_lo"], nxtc)
+        arm = act_m & hi_n & ~_get(c["budget_overrun"], nxtc) \
+            & (exec_n < c_lo_n)
+        t_fin = at + rem
+        t_ovr = at + (c_lo_n - exec_n)
+        # pending-interrupt slots: this step's pop frees a slot the
+        # pushes may immediately reuse (the event engine's heap does)
+        isfree = jnp.isinf(c["ev_time"]) | (ohI & is_int[:, None])
+        n_free = isfree.sum(axis=1)
+        oh1 = _oh(jnp.argmax(isfree, axis=1), K)
+        oh2 = _oh(jnp.argmax(isfree & ~oh1, axis=1), K)
+        do1 = act_m & (n_free >= 1)
+        do2 = arm & (n_free >= 2)
+        c["overflow"] = c["overflow"] | (act_m & (n_free < 1)) \
+            | (arm & (n_free < 2))
+        ddl_new = now + _get(tb["deadline_rel"], rcol)
+        nrel_new = now + _get(tb["period"], rcol)
+        tr_new = next_tick(now)
+
+        # ---- barrier, then deferred writes: one fused pass per array -
+        # XLA:CPU loop fusion re-evaluates a shared producer once per
+        # fused consumer; the barrier materializes every (P,) scalar
+        # and one-hot mask exactly once, so the ~20 write chains below
+        # are each a cheap read-modify-select pass
+        (ohR, ohT, ohI, ohTid, ohRun, ohC, ohN, oh1, oh2,
+         is_rel, is_tickR, is_int, accept, fresh_miss, done_m, fire_o,
+         act_m, has_cur, resume, has_ctx, reload, sv, lolo, was_b,
+         fresh_b, do_adv, growing, filling, do1, do2, dem, exec_r2,
+         rb_1, acc_1, new_res, ctx_acc_n, resident, kept, spadsave,
+         t_fin, t_ovr, cause_v, nxtc, now, ddl_new, nrel_new, tr_new,
+         rel_hi, mi_inc, mf_inc) = jax.lax.optimization_barrier(
+            (ohR, ohT, ohI, ohTid, ohRun, ohC, ohN, oh1, oh2,
+             is_rel, is_tickR, is_int, accept, fresh_miss, done_m,
+             fire_o, act_m, has_cur, resume, has_ctx, reload, sv, lolo,
+             was_b, fresh_b, do_adv, growing, filling, do1, do2, dem,
+             exec_r2, rb_1, acc_1, new_res, ctx_acc_n, resident, kept,
+             spadsave, t_fin, t_ovr, cause_v, nxtc, now, ddl_new,
+             nrel_new, tr_new, rel_hi, mi_inc, mf_inc))
+        c["ev_time"] = _chain(c["ev_time"], (ohI, is_int, jnp.inf),
+                              (oh1, do1, t_fin), (oh2, do2, t_ovr))
+        c["ev_tid"] = _chain(c["ev_tid"], (oh1, do1, nxtc),
+                             (oh2, do2, nxtc))
+        c["ev_kind"] = _chain(c["ev_kind"], (oh1, do1, 1), (oh2, do2, 2))
+        # per-task state (precedence follows the sequential order the
+        # chains replace; distinct-column conflicts were ruled out in
+        # the dispatch analysis above)
+        c["status"] = _chain(c["status"], (ohR, accept, _READY),
+                             (ohTid, done_m, _PEND),
+                             (ohC, has_cur, _INT), (ohN, act_m, _RUN))
+        c["exec_cy"] = _chain(c["exec_cy"], (ohR, accept, 0.0),
+                              (ohRun, do_adv | has_cur, exec_r2))
+        c["demand"] = _chain(c["demand"], (ohTid, done_m, jnp.inf),
+                             (ohR, accept, dem))
+        c["job_deadline"] = _chain(
+            c["job_deadline"], (ohR, fresh_miss, jnp.inf),
+            (ohR, accept, ddl_new))
+        c["next_release"] = _chain(
+            c["next_release"], (ohR, is_rel, nrel_new))
+        c["tick_release"] = _chain(c["tick_release"],
+                                   (ohT, is_tickR, jnp.inf),
+                                   (ohR, accept, tr_new))
+        c["pc"] = _chain(c["pc"], (ohR, accept, 0), (ohN, act_m, 1))
+        c["budget_overrun"] = _chain(c["budget_overrun"],
+                                     (ohR, accept, False),
+                                     (ohTid, fire_o, True))
+        c["released_in_hi"] = _chain(c["released_in_hi"],
+                                     (ohR, accept, rel_hi))
+        c["blocked_since"] = _chain(c["blocked_since"],
+                                    (ohN, fresh_b, now),
+                                    (ohN, was_b, jnp.nan))
+        c["cause"] = _chain(c["cause"], (ohN, fresh_b, cause_v),
+                            (ohN, was_b, _C_NONE))
+        if use_banks:
+            c["r_bytes"] = _chain(
+                c["r_bytes"],
+                (ohRun, growing | done_m | sv | lolo,
+                 jnp.where(done_m | sv | lolo, 0, rb_1)),
+                (ohN, reload, new_res))
+        else:
+            c["spad"] = _chain(
+                c["spad"],
+                (ohRun, growing | done_m | sv,
+                 jnp.where(done_m | sv, 0, rb_1)),
+                (ohN, reload, new_res))
+        c["acc_bytes"] = _chain(
+            c["acc_bytes"],
+            (ohRun, filling | done_m | has_cur,
+             jnp.where(done_m | has_cur, 0, acc_1)),
+            (ohN, resume & has_ctx, ctx_acc_n))
+        c["data_in_accel"] = _chain(
+            c["data_in_accel"], (ohTid, done_m, False),
+            (ohC, has_cur, kept & ~lolo),
+            (ohN, resume & has_ctx, True))
+        c["ctx_valid"] = _chain(c["ctx_valid"], (ohTid, done_m, False),
+                                (ohC, has_cur, True))
+        c["ctx_acc"] = _chain(c["ctx_acc"], (ohC, has_cur, acc_1))
+        c["ctx_spad"] = _chain(
+            c["ctx_spad"],
+            (ohC, has_cur, jnp.where(spadsave, resident, 0)))
+        c["ctx_kept"] = _chain(c["ctx_kept"], (ohC, has_cur, kept))
+        c["mi"] = _apply_inc(c["mi"], mi_inc)
+        c["mf"] = _apply_inc(c["mf"], mf_inc)
+        c["steps"] = c["steps"] + 1
+        return c
+
+    def _run(tb, sc, carry):
+        def cond(c):
+            # overflowing points keep stepping (their results are
+            # discarded and selectively re-run at a wider table); the
+            # healthy majority of the batch must run to completion
+            return c["alive"].any() & (c["steps"] < sc["max_steps"])
+
+        return jax.lax.while_loop(cond, functools.partial(_step, tb, sc),
+                                  carry)
+
+    return jax.jit(_run)
+
+
+@functools.lru_cache(maxsize=None)
+def _compiled_run(use_banks: bool, drop_lo: bool, preempt: str,
+                  nominal: bool):
+    """One jitted runner per static policy/profile class — the memo is
+    what makes 'one compilation per shape/config' true: jax.jit caches
+    specializations per *function object*, so handing back a fresh
+    closure per call would retrace and recompile every chunk."""
+    return _build_run(use_banks, drop_lo, preempt, nominal)
+
+
+# ----------------------------------------------------------------------
+# Host driver: state build, overflow retry, tail accounting, assembly
+# ----------------------------------------------------------------------
+
+def _rank_keys(b: _VecBatch) -> np.ndarray:
+    """Rank-compress the NumPy engine's (priority, column) int64 keys
+    into int32: pick_next only compares keys *within* a point, so a
+    per-point dense rank of the priorities preserves the selection
+    (ties still break on the lowest column) at a quarter of the
+    memory traffic."""
+    pr = np.minimum(b.prio, 2 ** 40)
+    key = np.empty((b.P, b.T), np.int32)
+    cols = np.arange(b.T, dtype=np.int32)
+    for p in range(b.P):
+        distinct = np.unique(pr[p])
+        key[p] = np.searchsorted(distinct, pr[p]).astype(np.int32) \
+            * (b.T + 1) + cols
+    return key
+
+
+def _tables(b: _VecBatch, seeds: Sequence[int]) -> Dict[str, "jnp.ndarray"]:
+    return {
+        "seed64": jnp.asarray(
+            np.asarray(seeds, dtype=np.int64).astype(np.uint64)),
+        "valid": jnp.asarray(b.valid),
+        "key32": jnp.asarray(_rank_keys(b)),
+        "period": jnp.asarray(b.period),
+        "deadline_rel": jnp.asarray(b.deadline_rel),
+        "c_lo": jnp.asarray(b.c_lo),
+        "is_hi": jnp.asarray(b.is_hi),
+        "eta": jnp.asarray(b.eta.astype(np.int32)),
+        "etab": jnp.asarray(b.etab.astype(np.int32)),
+        "prog_id": jnp.asarray(b.prog_id.astype(np.int32)),
+        "prog_total": jnp.asarray(b._prog_total.astype(np.float64)),
+        "seg_key": jnp.asarray(b._g_seg_key),
+        "seg_cycles": jnp.asarray(b._g_seg_cycles),
+        "seg_pat": jnp.asarray(b._g_seg_pat),
+        "pat_cumsum": jnp.asarray(b._g_pat_cumsum),
+        "op_key": jnp.asarray(b._g_op_key),
+        "op_end": jnp.asarray(b._g_op_end),
+        "op_hi": jnp.asarray(b._g_op_hi),
+    }
+
+
+def _carry0(b: _VecBatch, seeds: Sequence[int],
+            K: int) -> Dict[str, "jnp.ndarray"]:
+    """Initial carry: the freshly-initialized NumPy batch state (which
+    already drew the release phases from each point's host RNG) plus
+    empty metric/interrupt tables of width ``K``."""
+    P, T = b.P, b.T
+    f = lambda a: jnp.asarray(a)
+    zP = jnp.zeros(P)
+    zPi = jnp.zeros(P, jnp.int32)
+    return {
+        "status": jnp.zeros((P, T), jnp.int8),
+        "exec_cy": jnp.zeros((P, T)),
+        "demand": jnp.full((P, T), jnp.inf),
+        "job_deadline": jnp.zeros((P, T)),
+        "budget_overrun": jnp.zeros((P, T), bool),
+        "data_in_accel": jnp.zeros((P, T), bool),
+        "pc": jnp.zeros((P, T), jnp.int8),
+        "blocked_since": jnp.full((P, T), jnp.nan),
+        "cause": jnp.zeros((P, T), jnp.int8),
+        "released_in_hi": jnp.zeros((P, T), bool),
+        "r_bytes": jnp.zeros((P, T), jnp.int32),
+        "spad": jnp.zeros((P, T), jnp.int32),
+        "acc_bytes": jnp.zeros((P, T), jnp.int32),
+        "ctx_valid": jnp.zeros((P, T), bool),
+        "ctx_acc": jnp.zeros((P, T), jnp.int32),
+        "ctx_spad": jnp.zeros((P, T), jnp.int32),
+        "ctx_kept": jnp.zeros((P, T), bool),
+        "next_release": f(b.next_release),
+        "tick_release": jnp.full((P, T), jnp.inf),
+        "rel_cnt": jnp.zeros((P, T), jnp.int32),
+        "ev_time": jnp.full((P, K), jnp.inf),
+        "ev_tid": jnp.full((P, K), -1, jnp.int32),
+        "ev_kind": jnp.zeros((P, K), jnp.int8),
+        "locked": zPi,
+        "res_lo": zPi,
+        "act_cnt": zPi,
+        "hi_cnt": zPi,
+        "now": zP,
+        "mode": jnp.zeros(P, jnp.int32),
+        "running": jnp.full(P, -1, jnp.int32),
+        "accel_free_at": zP,
+        "run_started": zP,
+        "last_mode_stamp": zP,
+        "tick_cs": jnp.full(P, jnp.inf),
+        "alive": jnp.ones(P, bool),
+        "overflow": jnp.zeros(P, bool),
+        "steps": jnp.zeros((), jnp.int64),
+        "mi": jnp.zeros((P, _MI_W), jnp.int32),
+        "mf": jnp.zeros((P, _MF_W)),
+    }
+
+
+def _max_steps(b: _VecBatch, duration: float) -> int:
+    """Loose per-point event-count bound — a diverging while_loop is an
+    engine bug and must surface as an error, not a hang."""
+    with np.errstate(divide="ignore"):
+        rel = np.where(b.valid, duration / b.period + 2, 0.0).sum(axis=1)
+    return int(64 * (rel.max() + 16) + 65536)
+
+
+# (config, P, T, K) tuples whose XLA executable is already built in
+# this process — lets simulate_jbatch skip the serial warm-up span and
+# pool every chunk immediately on repeat runs
+_WARM: set = set()
+
+
+def _warm_key(policy: Policy, nominal: bool, P: int, T: int,
+              K: int) -> tuple:
+    return (policy.use_banks, policy.drop_lo_in_hi, policy.preemption,
+            nominal, P, T, K)
+
+
+def _run_once(b: _VecBatch, policy: Policy, seeds: Sequence[int],
+              duration: float, overrun_prob: float, cf: float,
+              nominal: bool, K: int) -> Dict[str, np.ndarray]:
+    """One compiled run of a prepared batch at interrupt-table width
+    ``K``; returns the final carry as NumPy arrays."""
+    run = _compiled_run(policy.use_banks, policy.drop_lo_in_hi,
+                        policy.preemption, nominal)
+    from jax.experimental import enable_x64
+    max_steps = _max_steps(b, duration)
+    # event times are float64; everything (array upload included) must
+    # happen under x64 or XLA would round-trip them through float32
+    with enable_x64():
+        tb = _tables(b, seeds)
+        sc = {"t_sr": jnp.float64(policy.t_sr),
+              "overrun_prob": jnp.float64(overrun_prob),
+              "cf": jnp.float64(cf),
+              "duration": jnp.float64(duration),
+              "max_steps": jnp.int64(max_steps)}
+        final = run(tb, sc, _carry0(b, seeds, K))
+        final = {k: np.asarray(v) for k, v in final.items()}
+    if final["steps"] >= max_steps and final["alive"].any():
+        raise RuntimeError(
+            f"jit engine: lockstep loop hit the {max_steps}-step "
+            "safety bound with live points remaining")
+    _WARM.add(_warm_key(policy, nominal, b.P, b.T, K))
+    return final
+
+
+def _run_chunk(tasksets, programs, policy, seeds, duration, overrun_prob,
+               cf, demand_profile: str) -> List[RunMetrics]:
+    """Simulate one chunk with the per-point overflow-retry ladder.
+
+    The chunk first runs at the narrow ``_K0`` interrupt table (ample
+    for typical points).  Points whose table overflowed — a per-point,
+    batch-composition-independent event — are re-run in small padded
+    sub-batches at doubled widths until they fit; the counter-based
+    RNG makes every retry bit-deterministic, so a point's result never
+    depends on which batch or table width executed it."""
+    nominal = demand_profile == "nominal"
+    out: List[Optional[RunMetrics]] = [None] * len(tasksets)
+    idx = list(range(len(tasksets)))
+    K = _K0
+    while idx:
+        ts = [tasksets[i] for i in idx]
+        sd = [int(seeds[i]) for i in idx]
+        # pad retry sub-batches up to the bucket size so the ladder
+        # reuses one compilation per (bucket, K) instead of one per
+        # subset shape (padded copies are simulated and discarded)
+        if K > _K0 and len(ts) < _RETRY_BUCKET:
+            pad = _RETRY_BUCKET - len(ts)
+            ts = ts + [ts[-1]] * pad
+            sd = sd + [sd[-1]] * pad
+        b = _VecBatch(ts, programs, policy, seeds=sd, duration=duration,
+                      overrun_prob=overrun_prob, cf=cf)
+        final = _run_once(b, policy, sd, duration, overrun_prob, cf,
+                          nominal, K)
+        metrics = _assemble(b, final, duration)
+        redo = []
+        for pos, i in enumerate(idx):
+            if final["overflow"][pos]:
+                redo.append(i)
+            else:
+                out[i] = metrics[pos]
+        idx = redo
+        K *= 2
+        if idx and K > _K_MAX:
+            raise RuntimeError(
+                "jit engine: pending-interrupt table exceeded "
+                f"{_K_MAX} slots — simulation state diverged")
+    return out  # type: ignore[return-value]
+
+
+def _assemble(b: _VecBatch, s: Dict[str, np.ndarray],
+              duration: float) -> List[RunMetrics]:
+    """Tail accounting (the event engine's post-loop pass) + RunMetrics
+    assembly from the final carry."""
+    P = b.P
+    out: List[RunMetrics] = []
+    live = (s["status"] != _PEND) & b.valid \
+        & (duration > s["job_deadline"])
+    mi, mf = s["mi"], s["mf"]
+    for p in range(P):
+        mode_cycles = mf[p, _MF_MC:_MF_MC + 3].copy()
+        mode_cycles[s["mode"][p]] += duration - s["last_mode_stamp"][p]
+        misses = mi[p, _MI_MISS:_MI_MISS + 2].astype(np.int64).copy()
+        for t in live[p].nonzero()[0]:
+            misses[int(b.is_hi[p, t])] += 1
+        out.append(RunMetrics(
+            pi_blocking=AggSamples(mf[p, _MF_PI], mi[p, _MI_PI_N]),
+            ci_blocking=AggSamples(mf[p, _MF_CI], mi[p, _MI_CI_N]),
+            save_cycles=AggSamples(mf[p, _MF_SAVE], mi[p, _MI_SAVE_N]),
+            restore_cycles=AggSamples(mf[p, _MF_RESTORE],
+                                      mi[p, _MI_RESTORE_N]),
+            jobs={"LO": int(mi[p, _MI_JOBS]),
+                  "HI": int(mi[p, _MI_JOBS + 1])},
+            done={"LO": int(mi[p, _MI_DONE]),
+                  "HI": int(mi[p, _MI_DONE + 1])},
+            misses={"LO": int(misses[0]), "HI": int(misses[1])},
+            misses_by_mode={k: int(mi[p, _MI_MBM + i])
+                            for i, k in enumerate(_MODE_KEYS)},
+            lo_released_in_hi=int(mi[p, _MI_LO_REL]),
+            lo_done_in_hi=int(mi[p, _MI_LO_DONE]),
+            mode_cycles={k: float(mode_cycles[i])
+                         for i, k in enumerate(_MODE_KEYS)},
+            cs_count=int(mi[p, _MI_CS]),
+            exec_cycles=float(mf[p, _MF_EXEC]),
+            overhead_cycles=float(mf[p, _MF_OVERHEAD])))
+    return out
+
+
+# ----------------------------------------------------------------------
+# Public entry point (called by simulator_vec.simulate_vbatch)
+# ----------------------------------------------------------------------
+
+def default_streams() -> int:
+    """Concurrent host threads driving independent compiled chunks.
+
+    The compiled engine releases the GIL for the whole while_loop, so
+    independent chunks genuinely overlap on separate cores — an engine
+    property the Python-loop backends cannot share (their lockstep is
+    host-call bound).  Override with ``REPRO_JIT_STREAMS``."""
+    env = os.environ.get("REPRO_JIT_STREAMS")
+    if env:
+        return max(int(env), 1)
+    return max(min(2, os.cpu_count() or 1), 1)
+
+
+def simulate_jbatch(tasksets: Sequence[List[TaskParams]],
+                    programs: Dict[str, Program], policy: Policy, *,
+                    seeds: Sequence[int], duration: float = 2e7,
+                    overrun_prob: float = 0.3, cf: float = 2.0,
+                    batch_size: int = 256,
+                    demand_profile: str = "sampled",
+                    streams: Optional[int] = None) -> List[RunMetrics]:
+    """Fully-compiled batch simulation: one ``lax.while_loop`` per
+    chunk of points, no host work inside the loop, chunks streamed
+    concurrently from ``streams`` host threads.
+
+    Prefer :func:`repro.core.simulator_vec.simulate_vbatch` with
+    ``select_backend="jit"`` — it validates arguments and routes here.
+    See the module docstring for the RNG-equivalence contract.
+    """
+    require_jax()
+    n = len(tasksets)
+    if n != len(seeds):
+        raise ValueError(f"{n} tasksets vs {len(seeds)} seeds")
+    streams = default_streams() if streams is None else max(streams, 1)
+    # small chunks keep the lockstep state cache-resident and give the
+    # thread pool work to overlap (64 measured fastest on the BENCH
+    # corpus — see docs/performance.md); the ragged tail span is
+    # padded to the common chunk shape so it reuses the same
+    # compilation (padded copies are simulated and discarded)
+    chunk = max(1, min(batch_size, _STREAM_CHUNK))
+    spans = []
+    for lo in range(0, n, chunk):
+        idxs = list(range(lo, min(lo + chunk, n)))
+        real = len(idxs)
+        if lo and real < chunk:
+            idxs = idxs + [idxs[-1]] * (chunk - real)
+        spans.append((idxs, real))
+
+    def go(span):
+        idxs, real = span
+        part = _run_chunk([tasksets[i] for i in idxs], programs, policy,
+                          [int(seeds[i]) for i in idxs], duration,
+                          overrun_prob, cf, demand_profile)
+        return part[:real]
+
+    def span_warm(span):
+        idxs, _ = span
+        T = max(len(tasksets[i]) for i in idxs)
+        return _warm_key(policy, demand_profile == "nominal",
+                         len(idxs), T, _K0) in _WARM
+
+    if streams == 1 or len(spans) == 1:
+        parts = [go(sp) for sp in spans]
+    elif all(span_warm(sp) for sp in spans):
+        # every span's executable is already built: pool everything
+        with ThreadPoolExecutor(max_workers=streams) as ex:
+            parts = list(ex.map(go, spans))
+    else:
+        # run the first span serially so the (chunk, _K0) compilation
+        # is warm before the pool fans out over the rest
+        parts = [go(spans[0])]
+        with ThreadPoolExecutor(max_workers=streams) as ex:
+            parts += list(ex.map(go, spans[1:]))
+    out: List[RunMetrics] = []
+    for part in parts:
+        out.extend(part)
+    return out

@@ -43,13 +43,17 @@ grid-tick collisions are idempotent scheduler passes in both engines).
 executed by this backend (``repro.experiments.spec``), so vec results
 never collide with — or invalidate — event-engine cache entries.
 
-An optional JAX path (``select_backend="jax"``) runs the fixed-shape
-candidate-reduction inner step under ``jax.jit``/``vmap``; it is
-numerically identical but pays a host<->device hop per step, so the
-NumPy path stays the CPU default (see docs/performance.md).
+``select_backend="jit"`` routes the whole batch to the fully-compiled
+``jax.lax.while_loop`` backend (``core.simulator_jit``): every lockstep
+iteration — candidate argmin, masked handlers, scheduler pass — runs
+on-device with no per-step host round-trip.  That backend trades the
+NumPy path's bit-exactness for *statistical* equivalence (counter-based
+RNG; exact on the zero-jitter ``demand_profile="nominal"``) and carries
+its own cache salt; see docs/performance.md.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Dict, List, Sequence
 
 import numpy as np
@@ -68,6 +72,13 @@ from repro.core.task import Crit, TaskParams
 # Event-engine points are salted by SIM_SEMANTICS_VERSION instead, so
 # the two engines never share (or invalidate) cache entries.
 VEC_SIM_SEMANTICS_VERSION = 1
+
+# Cache-key salt for campaign points executed by the jit backend
+# (core.simulator_jit re-exports it).  BUMP whenever a change to that
+# module alters any simulated result.  Defined here — not in
+# simulator_jit — so the experiments/spec layer can hash points
+# without importing JAX (~1.5s per worker process).
+JIT_SIM_SEMANTICS_VERSION = 1
 
 # status codes (mirror task.Status)
 _PEND, _READY, _RUN, _INT = 0, 1, 2, 3
@@ -125,38 +136,11 @@ class _VecProgram:
             1, -(-min(prog.working_set_bytes, _CAP) // _BB))
 
 
-# ----------------------------------------------------------------------
-# Optional JAX inner step (fixed-shape candidate reduction)
-# ----------------------------------------------------------------------
-
-_JAX_SELECT = None
-
-
-def _jax_select():
-    """Jitted vmap over points of the candidate min/argmin — the fixed-
-    shape inner step of the lockstep loop.  Numerically identical to the
-    NumPy path (asserted in tests); the per-step host<->device transfer
-    makes it slower on CPU, so it is opt-in."""
-    global _JAX_SELECT
-    if _JAX_SELECT is None:
-        import jax
-        import jax.numpy as jnp
-        from jax.experimental import enable_x64
-
-        @jax.jit
-        def _sel(cand):
-            row = jax.vmap(lambda c: (jnp.argmin(c), jnp.min(c)))
-            j, t = row(cand)
-            return j, t
-
-        def select(cand):
-            # event times are float64; a float32 round-trip would break
-            # the engine's exactness contract
-            with enable_x64():
-                return _sel(cand)
-
-        _JAX_SELECT = select
-    return _JAX_SELECT
+# valid simulate_vbatch backends ("jax" is a deprecated alias of "jit";
+# the old per-step jax candidate-select path it named was deleted — it
+# paid a host<->device hop per lockstep iteration for no gain)
+BACKENDS = ("numpy", "jit", "jax")
+DEMAND_PROFILES = ("sampled", "nominal")
 
 
 # ----------------------------------------------------------------------
@@ -171,7 +155,7 @@ class _VecBatch:
                  programs: Dict[str, Program], policy: Policy, *,
                  seeds: Sequence[int], duration: float,
                  overrun_prob: float, cf: float,
-                 select_backend: str = "numpy"):
+                 demand_profile: str = "sampled"):
         P = len(tasksets)
         T = max(len(ts) for ts in tasksets)
         self.P, self.T = P, T
@@ -183,7 +167,7 @@ class _VecBatch:
         self.use_banks = policy.use_banks
         self.drop_lo = policy.drop_lo_in_hi
         self.preempt = policy.preemption           # instruction|operator|none
-        self.select_backend = select_backend
+        self.demand_profile = demand_profile
 
         # ---- program table ------------------------------------------------
         prog_ids: Dict[int, int] = {}
@@ -779,22 +763,27 @@ class _VecBatch:
         # per-point rng draws, in the event engine's order.  Bound
         # ``Generator.random`` + the bit-exact identity
         # ``uniform(a, b) == a + (b - a) * random()`` (pinned by tests)
-        # halve the per-draw cost of this Python loop.
-        op = self.overrun_prob
-        w_hi = self.cf - 1.0
-        w_lo = 1.0 - 0.7
+        # halve the per-draw cost of this Python loop.  The "nominal"
+        # profile is the zero-jitter degenerate case (demand == C_LO,
+        # no draws) shared with the jit backend's exactness gate.
         hi_a = hi[accept]
         c_a = self.c_lo[ap, at_]
-        rands = self.rands
-        demands = [0.0] * len(ap)
-        for k, (p_, h, c) in enumerate(zip(ap.tolist(), hi_a.tolist(),
-                                           c_a.tolist())):
-            rnd = rands[p_]
-            if h and rnd() < op:
-                demands[k] = c * (1.0 + w_hi * rnd())
-            else:
-                demands[k] = c * (0.7 + w_lo * rnd())
-        self.demand[ap, at_] = demands
+        if self.demand_profile == "nominal":
+            self.demand[ap, at_] = c_a
+        else:
+            op = self.overrun_prob
+            w_hi = self.cf - 1.0
+            w_lo = 1.0 - 0.7
+            rands = self.rands
+            demands = [0.0] * len(ap)
+            for k, (p_, h, c) in enumerate(zip(ap.tolist(), hi_a.tolist(),
+                                               c_a.tolist())):
+                rnd = rands[p_]
+                if h and rnd() < op:
+                    demands[k] = c * (1.0 + w_hi * rnd())
+                else:
+                    demands[k] = c * (0.7 + w_lo * rnd())
+            self.demand[ap, at_] = demands
         self.jobs[ap, hi_a.astype(np.int64)] += 1
         rel_hi_mask = ~hi_a & (self.mode[ap] != _LO)
         self.released_in_hi[ap, at_] = rel_hi_mask
@@ -895,7 +884,6 @@ class _VecBatch:
         P0 = len(self.orig)
         T = self.T
         tail_state: Dict[int, tuple] = {}
-        select_jax = _jax_select() if self.select_backend == "jax" else None
         while True:
             P = self.P
             if P == 0:
@@ -905,11 +893,8 @@ class _VecBatch:
             cand[:, 1] = self.tickR_min
             cand[:, 2] = self.ev_min
             cand[:, 3] = self.tick_cs
-            if select_jax is not None:
-                j, tmin = (np.asarray(x) for x in select_jax(cand))
-            else:
-                j = np.argmin(cand, axis=1)
-                tmin = cand[self._ar, j]
+            j = np.argmin(cand, axis=1)
+            tmin = cand[self._ar, j]
             fire = self.alive & (tmin <= self.duration)
             expired = self.alive & ~fire
             if expired.any():
@@ -1023,25 +1008,61 @@ def simulate_vbatch(tasksets: Sequence[List[TaskParams]],
                     seeds: Sequence[int], duration: float = 2e7,
                     overrun_prob: float = 0.3, cf: float = 2.0,
                     batch_size: int = 256,
-                    select_backend: str = "numpy") -> List[RunMetrics]:
+                    select_backend: str = "numpy",
+                    demand_profile: str = "sampled") -> List[RunMetrics]:
     """Vectorized batch counterpart of :func:`repro.core.simulator
     .simulate_batch`: one independent simulated point per (taskset,
     seed) pair, all points advanced in lockstep SoA batches.
 
-    Metrics are bit-identical to the event-driven engine per point (see
-    the module docstring for the exactness contract).  ``batch_size``
-    bounds the lockstep width so a straggler point cannot serialize an
-    arbitrarily large batch; ``select_backend="jax"`` routes the fixed-
-    shape candidate-reduction step through ``jax.jit`` (experimental).
+    ``select_backend`` picks the lockstep executor:
+
+      * ``"numpy"`` (default) — bit-identical to the event-driven
+        engine per point (see the module docstring);
+      * ``"jit"`` — the fully-compiled ``jax.lax.while_loop`` backend
+        (``core.simulator_jit``): statistically equivalent under demand
+        jitter, exactly equivalent on ``demand_profile="nominal"``;
+        raises ``RuntimeError`` when JAX is not installed.  ``"jax"``
+        is accepted as a deprecated alias.
+
+    ``demand_profile="nominal"`` replaces the per-release demand draws
+    with the deterministic C_LO budget (the zero-jitter profile used by
+    the cross-backend exact-equivalence gate).  ``batch_size`` bounds
+    the lockstep width so a straggler point cannot serialize an
+    arbitrarily large batch.
     """
+    if select_backend not in BACKENDS:
+        raise ValueError(
+            f"unknown select_backend {select_backend!r}; "
+            f"want one of {BACKENDS}")
+    if demand_profile not in DEMAND_PROFILES:
+        raise ValueError(
+            f"unknown demand_profile {demand_profile!r}; "
+            f"want one of {DEMAND_PROFILES}")
     if len(tasksets) != len(seeds):
         raise ValueError(f"{len(tasksets)} tasksets vs {len(seeds)} seeds")
+    if select_backend in ("jit", "jax"):
+        if select_backend == "jax":
+            # the old per-step jax candidate-select path this named was
+            # numerically identical to numpy; the jit backend it now
+            # aliases is only *statistically* equivalent and returns
+            # AggSamples aggregates instead of per-event metric lists
+            warnings.warn(
+                "select_backend='jax' is a deprecated alias for 'jit' "
+                "(different RNG realizations, aggregate metrics); pass "
+                "'jit' explicitly or 'numpy' for bit-exact results",
+                DeprecationWarning, stacklevel=2)
+        from repro.core import simulator_jit
+        simulator_jit.require_jax(select_backend)
+        return simulator_jit.simulate_jbatch(
+            tasksets, programs, policy, seeds=seeds, duration=duration,
+            overrun_prob=overrun_prob, cf=cf, batch_size=batch_size,
+            demand_profile=demand_profile)
     out: List[RunMetrics] = []
     for lo in range(0, len(tasksets), batch_size):
         chunk_ts = list(tasksets[lo:lo + batch_size])
         chunk_seeds = list(seeds[lo:lo + batch_size])
         batch = _VecBatch(chunk_ts, programs, policy, seeds=chunk_seeds,
                           duration=duration, overrun_prob=overrun_prob,
-                          cf=cf, select_backend=select_backend)
+                          cf=cf, demand_profile=demand_profile)
         out.extend(batch.run())
     return out

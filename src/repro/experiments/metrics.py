@@ -13,7 +13,7 @@ from __future__ import annotations
 from collections import defaultdict
 from typing import Any, Dict, Iterable, List, Tuple
 
-from repro.core.simulator import RunMetrics
+from repro.core.simulator import AggSamples, RunMetrics
 
 
 def metrics_row(m: RunMetrics, **point_fields: Any) -> Dict[str, Any]:
@@ -21,12 +21,19 @@ def metrics_row(m: RunMetrics, **point_fields: Any) -> Dict[str, Any]:
 
     ``point_fields`` (policy name, u, gamma, ...) are merged in so rows
     are self-describing and groupable without the originating spec.
+    Per-event lists may arrive pre-aggregated as
+    :class:`~repro.core.simulator.AggSamples` (the jit backend carries
+    sums/counts on-device instead of sample lists).
     """
     row: Dict[str, Any] = dict(point_fields)
     for name, xs in (("pi", m.pi_blocking), ("ci", m.ci_blocking),
                      ("save", m.save_cycles), ("restore", m.restore_cycles)):
-        row[f"{name}_sum"] = float(sum(xs))
-        row[f"{name}_n"] = len(xs)
+        if isinstance(xs, AggSamples):
+            row[f"{name}_sum"] = xs.total
+            row[f"{name}_n"] = xs.n
+        else:
+            row[f"{name}_sum"] = float(sum(xs))
+            row[f"{name}_n"] = len(xs)
     row.update(
         jobs_lo=m.jobs["LO"], jobs_hi=m.jobs["HI"],
         done_lo=m.done["LO"], done_hi=m.done["HI"],

@@ -20,12 +20,14 @@ Execution has two shapes:
     (``_memo_taskset``) — a sweep that revisits the same
     ``(u, gamma, n_tasks, cf, seed)`` cell under several policies
     builds each task set once per worker instead of once per point;
-  * ``engine="vec"`` points are grouped into whole cache-miss *chunks*
-    and handed to the vectorized SoA backend
-    (``core.simulator_vec.simulate_vbatch``), which advances hundreds
-    of points per lockstep step.  The content-addressed cache contract
-    is unchanged: every point is still keyed and stored individually
-    (vec keys carry ``VEC_SIM_SEMANTICS_VERSION``).
+  * ``engine="vec"`` / ``engine="jit"`` points are grouped into whole
+    cache-miss *chunks* and handed to the vectorized SoA backend
+    (``core.simulator_vec.simulate_vbatch``, which routes ``jit`` on
+    to the fully-compiled ``core.simulator_jit`` loop), advancing
+    hundreds of points per lockstep step.  The content-addressed cache
+    contract is unchanged: every point is still keyed and stored
+    individually (vec keys carry ``VEC_SIM_SEMANTICS_VERSION``, jit
+    keys ``JIT_SIM_SEMANTICS_VERSION``).
 
 ``Campaign.collect()`` returns the tidy per-point rows in point order,
 cache hits and fresh runs interleaved transparently — re-running an
@@ -95,11 +97,13 @@ def _run_sim(point: SimPoint) -> Dict[str, Any]:
     policy = point.policy_obj()
     tasks = _memo_taskset(point.u, point.gamma, point.n_tasks, point.cf,
                           point.seed, point.library)
-    if point.engine == "vec":
+    if point.engine in ("vec", "jit"):
         m = simulate_vbatch([tasks], programs, policy, seeds=[point.seed],
                             duration=point.duration,
                             overrun_prob=point.overrun_prob,
-                            cf=point.cf)[0]
+                            cf=point.cf,
+                            select_backend="numpy" if point.engine == "vec"
+                            else "jit")[0]
     else:
         m = simulate(tasks, programs, policy, duration=point.duration,
                      seed=point.seed, overrun_prob=point.overrun_prob,
@@ -130,25 +134,27 @@ def _execute(payload: Dict[str, Any]) -> Dict[str, Any]:
 def _execute_chunk(payloads: List[Dict[str, Any]]) -> List[Dict[str, Any]]:
     """Worker entry point for a whole chunk of points.
 
-    Vec-engine sim points are grouped by their shared scalar parameters
-    (policy / duration / cf / overrun_prob / library) and executed in
-    one ``simulate_vbatch`` call per group — the batch-execution fast
-    path.  Anything else in the chunk falls back to the per-point
-    runners.  Row order matches the input payload order.
+    Vec- and jit-engine sim points are grouped by engine plus their
+    shared scalar parameters (policy / duration / cf / overrun_prob /
+    library) and executed in one ``simulate_vbatch`` call per group —
+    the batch-execution fast path.  Anything else in the chunk falls
+    back to the per-point runners.  Row order matches the input
+    payload order.
     """
     rows: List[Optional[Dict[str, Any]]] = [None] * len(payloads)
     groups: Dict[Tuple, List[Tuple[int, SimPoint]]] = {}
     for i, d in enumerate(payloads):
         point = point_from_dict(d)
-        if isinstance(point, SimPoint) and point.engine == "vec":
-            key = (point.policy, point.duration, point.cf,
+        if isinstance(point, SimPoint) and point.engine in ("vec", "jit"):
+            key = (point.engine, point.policy, point.duration, point.cf,
                    point.overrun_prob, point.library)
             groups.setdefault(key, []).append((i, point))
         elif isinstance(point, FuncPoint):
             rows[i] = _run_func(point)
         else:
             rows[i] = _run_sim(point)
-    for (pol_items, duration, cf, op, library), items in groups.items():
+    for (engine, pol_items, duration, cf, op, library), items \
+            in groups.items():
         programs = cached_library(library)
         policy = policy_from_dict(dict(pol_items))
         tasksets = [_memo_taskset(pt.u, pt.gamma, pt.n_tasks, pt.cf,
@@ -156,7 +162,9 @@ def _execute_chunk(payloads: List[Dict[str, Any]]) -> List[Dict[str, Any]]:
         seeds = [pt.seed for _, pt in items]
         ms = simulate_vbatch(tasksets, programs, policy, seeds=seeds,
                              duration=duration, overrun_prob=op, cf=cf,
-                             batch_size=VEC_CHUNK)
+                             batch_size=VEC_CHUNK,
+                             select_backend="numpy" if engine == "vec"
+                             else "jit")
         for (i, pt), m in zip(items, ms):
             rows[i] = metrics_row(
                 m, policy=policy.name, u=pt.u, gamma=pt.gamma,
@@ -198,12 +206,12 @@ class Campaign:
         self.stats = {"hits": len(points) - len(todo), "misses": len(todo)}
 
         payloads = [points[i].to_dict() for i in todo]
-        # vec-engine sim points take the chunked batch-execution path:
-        # whole cache-miss chunks go to simulate_vbatch instead of one
-        # point per task (each point still cached individually)
+        # vec/jit-engine sim points take the chunked batch-execution
+        # path: whole cache-miss chunks go to simulate_vbatch instead
+        # of one point per task (each point still cached individually)
         vec_sel = [k for k, i in enumerate(todo)
                    if isinstance(points[i], SimPoint)
-                   and points[i].engine == "vec"]
+                   and points[i].engine in ("vec", "jit")]
         vec_set = set(vec_sel)
         other_sel = [k for k in range(len(todo)) if k not in vec_set]
         if len(payloads) <= 1 or self.workers <= 1:

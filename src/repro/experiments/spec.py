@@ -32,12 +32,15 @@ from typing import Any, Dict, Iterator, List, Sequence, Tuple
 
 from repro.core.scheduler import Policy
 from repro.core.simulator import SIM_SEMANTICS_VERSION
-from repro.core.simulator_vec import VEC_SIM_SEMANTICS_VERSION
+# both engine salts live in (jax-free) simulator_vec: hashing a jit
+# point must not import JAX into every campaign worker
+from repro.core.simulator_vec import (JIT_SIM_SEMANTICS_VERSION,
+                                      VEC_SIM_SEMANTICS_VERSION)
 from repro.core.taskgen import point_seed
 
 SPEC_VERSION = 1
 
-ENGINES = ("event", "vec")
+ENGINES = ("event", "vec", "jit")
 
 
 def canonical_json(obj: Any) -> str:
@@ -71,7 +74,7 @@ class SimPoint:
     cf: float
     overrun_prob: float
     library: str = "sim"                  # 'sim' (no arch:*) | 'all'
-    engine: str = "event"                 # 'event' | 'vec'
+    engine: str = "event"                 # 'event' | 'vec' | 'jit'
 
     kind = "sim"
 
@@ -86,11 +89,13 @@ class SimPoint:
         d["sim_v"] = SIM_SEMANTICS_VERSION
         # Cache contract across engines: event-engine points serialize
         # exactly as before this field existed (their keys — and every
-        # previously cached result — survive), while vec points carry
-        # the engine tag plus their own semantics salt, so the two
-        # engines never share or clobber cache entries.
+        # previously cached result — survive), while vec/jit points
+        # carry the engine tag plus their own semantics salt, so no
+        # two engines ever share or clobber cache entries.
         if self.engine == "event":
             d.pop("engine")
+        elif self.engine == "jit":
+            d["jit_sim_v"] = JIT_SIM_SEMANTICS_VERSION
         else:
             d["vec_sim_v"] = VEC_SIM_SEMANTICS_VERSION
         return d
@@ -161,7 +166,7 @@ class Sweep:
     cf: float = 2.0
     overrun_prob: float = 0.3
     library: str = "sim"
-    engine: str = "event"                 # 'event' | 'vec'
+    engine: str = "event"                 # 'event' | 'vec' | 'jit'
 
     def __post_init__(self):
         names = [p.name for p in self.policies]

@@ -1,0 +1,258 @@
+"""Jit (fully-compiled) engine contract suite.
+
+Pins the two halves of the jit backend's RNG-equivalence contract
+(core/simulator_jit.py): bit-exact equality with the NumPy vec engine
+on the zero-jitter ``demand_profile="nominal"`` corpus (no in-loop
+draws exist there), and statistical equality on the sampled corpus
+(counter-based splitmix64 draws, same distributions, different
+realizations).  Also covers the overflow-retry ladder's bookkeeping,
+batch-composition independence, the deprecated ``"jax"`` alias, and
+the JAX-absent import guard.
+
+Compilation note: each (policy-config, corpus-shape) pair compiles the
+whole lockstep while_loop once per process (~tens of seconds), so the
+tests below deliberately share two corpora — keep it that way when
+adding cases.
+"""
+import dataclasses
+import importlib
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import Policy, generate_taskset, simulate
+from repro.core import simulator_jit as sj
+from repro.core.simulator import AggSamples
+from repro.core.simulator_vec import simulate_vbatch
+from repro.experiments.metrics import metrics_row
+from repro.experiments.runner import cached_library
+
+LIB = cached_library("sim")
+
+# shared corpora (see module docstring): one homogeneous fig8-style
+# batch for the mesc tests, one mixed-size batch for the policy sweep
+SIZES = [3, 10, 6, 13]
+MIXED_TS = [generate_taskset(0.9, seed=s, n_tasks=n, programs=LIB)
+            for s, n in enumerate(SIZES)]
+MIXED_SEEDS = list(range(len(SIZES)))
+
+FIG8_TS, FIG8_SEEDS = [], []
+for u in (0.7, 0.9):
+    for s in range(16):
+        FIG8_TS.append(generate_taskset(u, seed=s, n_tasks=10,
+                                        programs=LIB))
+        FIG8_SEEDS.append(s)
+
+
+def rows(ms):
+    return [metrics_row(m) for m in ms]
+
+
+class TestZeroJitterExactEquivalence:
+    """No in-loop draws on the nominal profile -> jit == vec exactly."""
+
+    def test_mesc_fig8_corpus_exact(self):
+        a = simulate_vbatch(FIG8_TS, LIB, Policy.mesc(), seeds=FIG8_SEEDS,
+                            duration=2e6, demand_profile="nominal")
+        b = simulate_vbatch(FIG8_TS, LIB, Policy.mesc(), seeds=FIG8_SEEDS,
+                            duration=2e6, demand_profile="nominal",
+                            select_backend="jit")
+        assert rows(a) == rows(b)
+
+    @pytest.mark.parametrize("policy", [
+        dataclasses.replace(Policy.mesc(use_banks=False), name="mesc-noB"),
+        Policy(preemption="none", drop_lo_in_hi=True, name="amc-np"),
+        Policy(preemption="operator", name="lp"),
+    ], ids=lambda p: p.name)
+    def test_policy_variants_mixed_sizes_exact(self, policy):
+        """Bank-less save path, AMC drop + non-preemptive, operator
+        boundaries — on one padded mixed-n_tasks batch."""
+        a = simulate_vbatch(MIXED_TS, LIB, policy, seeds=MIXED_SEEDS,
+                            duration=4e6, demand_profile="nominal")
+        b = simulate_vbatch(MIXED_TS, LIB, policy, seeds=MIXED_SEEDS,
+                            duration=4e6, demand_profile="nominal",
+                            select_backend="jit")
+        assert rows(a) == rows(b)
+
+    def test_nominal_vec_matches_event_nominal_semantics(self):
+        """The nominal profile itself is engine-consistent: the NumPy
+        vec engine with nominal demand is still a valid simulation
+        (sanity for the gate's reference side)."""
+        ms = simulate_vbatch(FIG8_TS[:4], LIB, Policy.mesc(),
+                             seeds=FIG8_SEEDS[:4], duration=2e6,
+                             demand_profile="nominal")
+        for m in ms:
+            assert m.jobs["LO"] + m.jobs["HI"] > 0
+            assert m.exec_cycles > 0
+
+
+class TestStatisticalEquivalence:
+    """Sampled profile: distributions equal, realizations differ."""
+
+    def test_fig8_success_rates_within_ci(self):
+        from benchmarks.perf_sim import binomial_bound
+        v = simulate_vbatch(FIG8_TS, LIB, Policy.mesc(), seeds=FIG8_SEEDS,
+                            duration=2e7)
+        j = simulate_vbatch(FIG8_TS, LIB, Policy.mesc(), seeds=FIG8_SEEDS,
+                            duration=2e7, select_backend="jit")
+        rv, rj = rows(v), rows(j)
+        n = len(rv)
+        for field in ("success_all", "success_hi"):
+            pv = sum(r[field] for r in rv) / n
+            pj = sum(r[field] for r in rj) / n
+            bound = binomial_bound(0.5 * (pv + pj), n)
+            assert abs(pv - pj) <= bound, (field, pv, pj, bound)
+        # volume metrics agree to a few percent on the pooled corpus
+        for field in ("jobs_lo", "jobs_hi", "exec_cycles"):
+            sv = sum(r[field] for r in rv)
+            sj_ = sum(r[field] for r in rj)
+            assert sv > 0
+            assert abs(sv - sj_) / sv < 0.06, (field, sv, sj_)
+
+    def test_deterministic_and_composition_independent(self):
+        """Counter-based RNG: same point -> same result, regardless of
+        run repetition or batch order."""
+        a = simulate_vbatch(FIG8_TS, LIB, Policy.mesc(),
+                            seeds=FIG8_SEEDS, duration=2e7,
+                            select_backend="jit")
+        b = simulate_vbatch(FIG8_TS, LIB, Policy.mesc(),
+                            seeds=FIG8_SEEDS, duration=2e7,
+                            select_backend="jit")
+        assert rows(a) == rows(b)
+        rev = simulate_vbatch(FIG8_TS[::-1], LIB, Policy.mesc(),
+                              seeds=FIG8_SEEDS[::-1], duration=2e7,
+                              select_backend="jit")
+        assert rows(rev)[::-1] == rows(a)
+
+
+class TestAggSamples:
+    def test_metrics_row_consumes_aggregates(self):
+        from repro.core.simulator import RunMetrics
+        m = RunMetrics(pi_blocking=AggSamples(12.5, 3),
+                       ci_blocking=AggSamples(0.0, 0))
+        row = metrics_row(m)
+        assert row["pi_sum"] == 12.5 and row["pi_n"] == 3
+        assert row["ci_sum"] == 0.0 and row["ci_n"] == 0
+
+    def test_jit_returns_aggregates(self):
+        m = simulate_vbatch(FIG8_TS[:1], LIB, Policy.mesc(),
+                            seeds=FIG8_SEEDS[:1], duration=2e6,
+                            demand_profile="nominal",
+                            select_backend="jit")[0]
+        assert isinstance(m.pi_blocking, AggSamples)
+        assert isinstance(m.save_cycles, AggSamples)
+        assert len(m.save_cycles) == m.cs_count
+
+
+class TestOverflowRetryLadder:
+    """_run_chunk bookkeeping, with _run_once stubbed (no compiles)."""
+
+    def test_selective_retry_merges_and_widens(self, monkeypatch):
+        calls = []
+
+        def run_once(b, policy, seeds, duration, op, cf, nominal, K):
+            # odd-seed points overflow the primary table width only
+            calls.append((list(seeds), K))
+            return {"overflow": np.array([K <= sj._K0 and s % 2 == 1
+                                          for s in seeds]),
+                    "seeds": list(seeds)}
+
+        monkeypatch.setattr(sj, "_run_once", run_once)
+        monkeypatch.setattr(
+            sj, "_assemble",
+            lambda b, final, duration: [f"m{s}" for s in final["seeds"]])
+        monkeypatch.setattr(sj, "_RETRY_BUCKET", 4)
+        out = sj._run_chunk(MIXED_TS, LIB, Policy.mesc(), [0, 1, 2, 3],
+                            4e6, 0.3, 2.0, "sampled")
+        # odd seeds overflowed at K0 and were re-run once, wider
+        assert out == ["m0", "m1", "m2", "m3"]
+        assert len(calls) == 2
+        assert calls[0] == ([0, 1, 2, 3], sj._K0)
+        retry_seeds, retry_k = calls[1]
+        assert retry_k == 2 * sj._K0
+        # padded to the retry bucket with copies of the last point
+        assert retry_seeds == [1, 3, 3, 3]
+
+    def test_ladder_gives_up_past_kmax(self, monkeypatch):
+        monkeypatch.setattr(
+            sj, "_run_once",
+            lambda b, policy, seeds, duration, op, cf, nominal, K:
+            {"overflow": np.ones(b.P, bool), "seeds": list(seeds)})
+        monkeypatch.setattr(
+            sj, "_assemble", lambda b, final, duration: [None] * b.P)
+        with pytest.raises(RuntimeError, match="exceeded"):
+            sj._run_chunk(MIXED_TS[:1], LIB, Policy.mesc(), [0],
+                          1e6, 0.3, 2.0, "sampled")
+
+
+class TestBackendSelection:
+    def test_unknown_backend_raises(self):
+        with pytest.raises(ValueError, match="unknown select_backend"):
+            simulate_vbatch(MIXED_TS[:1], LIB, Policy.mesc(), seeds=[0],
+                            duration=1e5, select_backend="cuda")
+
+    def test_unknown_demand_profile_raises(self):
+        with pytest.raises(ValueError, match="unknown demand_profile"):
+            simulate_vbatch(MIXED_TS[:1], LIB, Policy.mesc(), seeds=[0],
+                            duration=1e5, demand_profile="worst")
+
+    def test_jax_alias_routes_to_jit(self):
+        a = simulate_vbatch(FIG8_TS[:2], LIB, Policy.mesc(),
+                            seeds=FIG8_SEEDS[:2], duration=2e6,
+                            demand_profile="nominal",
+                            select_backend="jit")
+        b = simulate_vbatch(FIG8_TS[:2], LIB, Policy.mesc(),
+                            seeds=FIG8_SEEDS[:2], duration=2e6,
+                            demand_profile="nominal",
+                            select_backend="jax")
+        assert rows(a) == rows(b)
+
+    def test_mismatched_seed_count_raises(self):
+        with pytest.raises(ValueError, match="tasksets vs"):
+            simulate_vbatch(MIXED_TS, LIB, Policy.mesc(), seeds=[0],
+                            duration=1e5, select_backend="jit")
+
+
+class TestPerfHarnessEquivalenceGate:
+    """benchmarks.perf_sim's gating check on a micro corpus (reuses
+    the shapes compiled above)."""
+
+    def test_check_equivalence_micro(self):
+        from benchmarks.perf_sim import check_equivalence
+        spec = dict(utils=(0.7, 0.9), n_sets=16, duration=2e6,
+                    n_tasks=10)
+        report = check_equivalence(spec)
+        assert report["vec_mismatched_points"] == 0
+        assert report["jit_nominal_mismatched_points"] == 0
+        assert report["jit_statistical_ok"]
+
+
+# keep last: reloads simulator_jit, which clears its compilation cache
+class TestJaxAbsentGuard:
+    def test_module_imports_and_fails_actionably_without_jax(self):
+        class _Block:
+            def find_spec(self, name, path=None, target=None):
+                if name == "jax" or name.startswith("jax."):
+                    raise ImportError("jax blocked by test")
+                return None
+
+        saved = {k: sys.modules.pop(k) for k in list(sys.modules)
+                 if k == "jax" or k.startswith("jax.")}
+        blocker = _Block()
+        sys.meta_path.insert(0, blocker)
+        try:
+            mod = importlib.reload(sj)
+            assert mod.jax is None          # import still succeeded
+            with pytest.raises(RuntimeError, match="install jax"):
+                mod.require_jax("jit")
+            # the public entry point surfaces the same actionable error
+            with pytest.raises(RuntimeError, match="select_backend='jit'"):
+                simulate_vbatch(MIXED_TS[:1], LIB, Policy.mesc(),
+                                seeds=[0], duration=1e5,
+                                select_backend="jit")
+        finally:
+            sys.meta_path.remove(blocker)
+            sys.modules.update(saved)
+            importlib.reload(sj)
+        assert sj.jax is not None

@@ -4,9 +4,11 @@ The vectorized SoA backend (`core.simulator_vec`) claims bit-exact
 per-run metrics against the event-driven engine — not "close", equal.
 These tests pin that contract across policies, taskset shapes, seeds
 and horizons (hypothesis-driven), pin the RNG identity the vectorized
-release path relies on, the cache-key contract that keeps the two
-engines' campaign caches disjoint, and the committed ``BENCH_sim.json``
-schema that CI's perf-smoke job diffs against.
+release path relies on, the cache-key contract that keeps the three
+engines' (event / vec / jit) campaign caches disjoint — including a
+committed byte-stability fixture — and the committed ``BENCH_sim.json``
+schema that CI's perf-smoke job diffs against.  The jit backend's own
+equivalence contract lives in ``tests/test_simulator_jit.py``.
 """
 import dataclasses
 import json
@@ -143,32 +145,38 @@ class TestEngineInternals:
                   & batch.valid).sum(axis=1)
         np.testing.assert_array_equal(batch.res_lo_cnt, res_lo)
 
-    def test_jax_select_matches_numpy(self):
-        """The optional jax.vmap candidate-reduction step (the fixed-
-        shape inner step) selects identical events."""
-        jax = pytest.importorskip("jax")
-        del jax
-        from repro.core.simulator_vec import _jax_select
-        select = _jax_select()
-        rng = np.random.default_rng(0)
-        cand = rng.uniform(0, 1e8, size=(32, 4))
-        cand[rng.random(cand.shape) < 0.3] = np.inf
-        j, t = (np.asarray(x) for x in select(cand))
-        np.testing.assert_array_equal(j, np.argmin(cand, axis=1))
-        np.testing.assert_array_equal(
-            t, cand[np.arange(len(cand)), np.argmin(cand, axis=1)])
-
-    def test_jax_backend_end_to_end(self):
+    def test_nominal_profile_draws_nothing(self):
+        """The zero-jitter profile consumes no demand draws: after a
+        run, each point's RNG stream sits exactly where the phase
+        draws left it."""
         tasks = generate_taskset(0.7, seed=1, n_tasks=4, programs=LIB)
-        a = simulate_vbatch([tasks], LIB, Policy.mesc(), seeds=[1],
-                            duration=1e6)[0]
-        b = simulate_vbatch([tasks], LIB, Policy.mesc(), seeds=[1],
-                            duration=1e6, select_backend="jax")[0]
-        assert metrics_row(a) == metrics_row(b)
+        from repro.core.simulator_vec import _VecBatch
+        batch = _VecBatch([tasks], LIB, Policy.mesc(), seeds=[1],
+                          duration=1e6, overrun_prob=0.3, cf=2.0,
+                          demand_profile="nominal")
+        ref = np.random.default_rng(1)
+        for tp in tasks:
+            ref.uniform(0, tp.period)
+        batch.run()
+        assert batch.rngs[0].random() == ref.random()
+
+    def test_nominal_demand_is_c_lo(self):
+        """Zero-jitter profile: every accepted job's demand is exactly
+        its C_LO budget."""
+        from repro.core.simulator_vec import _VecBatch
+        tasks = generate_taskset(0.8, seed=2, n_tasks=6, programs=LIB)
+        batch = _VecBatch([tasks], LIB, Policy.mesc(), seeds=[2],
+                          duration=5e5, overrun_prob=0.3, cf=2.0,
+                          demand_profile="nominal")
+        batch.run()
+        live = np.isfinite(batch.demand) & batch.valid
+        assert live.any()
+        np.testing.assert_array_equal(batch.demand[live],
+                                      batch.c_lo[live])
 
 
 class TestCacheContract:
-    """Vec points are salted; event points keep their pre-change keys."""
+    """Vec/jit points are salted; event points keep pre-change keys."""
 
     def _point(self, engine):
         sweep = Sweep(name="t", policies=(Policy.mesc(),), n_sets=1,
@@ -179,14 +187,47 @@ class TestCacheContract:
         d = self._point("event").to_dict()
         assert "engine" not in d
         assert "vec_sim_v" not in d
+        assert "jit_sim_v" not in d
 
     def test_vec_point_salted(self):
         d = self._point("vec").to_dict()
         assert d["engine"] == "vec"
         assert d["vec_sim_v"] == VEC_SIM_SEMANTICS_VERSION
+        assert "jit_sim_v" not in d
+
+    def test_jit_point_salted(self):
+        from repro.core.simulator_jit import JIT_SIM_SEMANTICS_VERSION
+        d = self._point("jit").to_dict()
+        assert d["engine"] == "jit"
+        assert d["jit_sim_v"] == JIT_SIM_SEMANTICS_VERSION
+        assert "vec_sim_v" not in d
 
     def test_keys_disjoint_across_engines(self):
-        assert self._point("event").key() != self._point("vec").key()
+        keys = {e: self._point(e).key() for e in ("event", "vec", "jit")}
+        assert len(set(keys.values())) == 3
+
+    def test_unknown_engine_rejected(self):
+        with pytest.raises(ValueError, match="unknown engine"):
+            Sweep(name="t", policies=(Policy.mesc(),), n_sets=1,
+                  duration=1e6, engine="cuda")
+
+    def test_committed_hash_fixture_byte_stable(self):
+        """Pre-PR event/vec point keys (and the new jit keys) pinned
+        against a committed fixture: cache entries must never silently
+        migrate."""
+        fixture = json.loads(
+            (REPO_ROOT / "tests" / "data"
+             / "engine_point_hashes.json").read_text())
+        for engine, expected in fixture.items():
+            sweep = Sweep(name="fixture",
+                          policies=(Policy.mesc(), Policy.amc()),
+                          utils=(0.7, 0.9), n_sets=2, duration=2e7,
+                          engine=engine)
+            pts = sweep.points()
+            for i in range(4):
+                assert pts[i].key() == expected[f"point_{i}"], \
+                    f"{engine} point {i} hash moved"
+            assert sweep.spec_hash() == expected["spec_hash"]
 
     def test_event_spec_hash_unchanged_by_engine_field(self):
         """Sweep spec hashes for event sweeps must not move (manifests
@@ -223,26 +264,39 @@ class TestBenchBaseline:
 
     def test_committed_baseline_schema(self):
         doc = json.loads((REPO_ROOT / "BENCH_sim.json").read_text())
-        assert doc["schema_version"] == 1
+        assert doc["schema_version"] == 2
         full = doc["sections"]["full"]
         assert full["corpus"]["points"] == 512
         assert full["corpus"]["style"] == "fig8"
-        for eng in ("event", "vec"):
+        for eng in ("event", "vec", "jit"):
             block = full["engines"][eng]
             assert block["points_per_sec"] > 0
             assert block["seconds"] > 0
+            # schema v2: per-repeat samples + spread, so CI deltas can
+            # be read against measured run-to-run noise
+            assert len(block["samples"]) >= 3
+            assert block["spread_pct"] >= 0
         assert full["speedup_vec_vs_event"] > 1.0
-        assert full["mismatched_points"] == 0
+        eq = full["equivalence"]
+        assert eq["vec_mismatched_points"] == 0
+        assert eq["jit_nominal_mismatched_points"] == 0
+        assert eq["jit_statistical_ok"] is True
 
-    def test_perf_sim_smoke_runs_in_budget(self):
-        """The CI perf-smoke measurement completes quickly and the two
-        engines agree on every smoke-corpus point."""
-        import time
-        from benchmarks.perf_sim import SMOKE, measure
-        t0 = time.time()
-        result = measure(SMOKE)
-        assert time.time() - t0 < 120          # CI time budget
-        assert result["mismatched_points"] == 0
-        assert set(result["engines"]) == {"event", "vec"}
-        for eng in result["engines"].values():
-            assert eng["points_per_sec"] > 0
+    def test_perf_harness_stats_and_delta(self, capsys):
+        """Harness internals: median-of-N stats and baseline deltas
+        (including a schema-v1 baseline missing the jit engine)."""
+        from benchmarks.perf_sim import _stats, print_delta
+        s = _stats([2.0, 1.0, 3.0], 10)
+        assert s["seconds"] == 2.0            # median, not first sample
+        assert s["points_per_sec"] == 5.0
+        assert s["samples"] == [2.0, 1.0, 3.0]
+        assert s["spread_pct"] == 100.0
+        new = {"engines": {e: _stats([1.0, 1.0, 1.0], 10)
+                           for e in ("event", "vec", "jit")}}
+        old_v1 = {"sections": {"smoke": {"engines": {
+            "event": {"points_per_sec": 20.0},
+            "vec": {"points_per_sec": 5.0}}}}}
+        print_delta("smoke", new, old_v1)
+        out = capsys.readouterr().out
+        assert "perf_delta,smoke,event,20.0,10.0,-50.0%" in out
+        assert "# no baseline for engine 'jit'" in out
