@@ -12,6 +12,7 @@ means exactly.
 from __future__ import annotations
 
 import dataclasses
+import math
 
 import numpy as np
 
@@ -31,6 +32,15 @@ def sweep(full: bool = False, engine: str = "event") -> Sweep:
                  n_sets=n_sets, engine=engine)
 
 
+def _pm(rows, name):
+    """pooled_mean with this figure's legacy empty-cell convention:
+    a cell with zero events reads 0 cycles here (the table's columns
+    are cycle counts and the speedup guard divides by max(x, 1.0),
+    which NaN would poison — max(NaN, 1.0) is NaN in Python)."""
+    v = pooled_mean(rows, name)
+    return 0.0 if math.isnan(v) else v
+
+
 def main(full: bool = False, engine: str = "event", **campaign_kw):
     with Timer() as t:
         rows = Campaign(sweep(full, engine), **campaign_kw).collect()
@@ -43,14 +53,14 @@ def main(full: bool = False, engine: str = "event", **campaign_kw):
         mb = cells[("mesc-noB", u)]
         mn = cells[("np", u)]
         row = {
-            "c_save": pooled_mean(ms, "save"),
-            "c_restore": pooled_mean(ms, "restore"),
-            "c_save_noB": pooled_mean(mb, "save"),
-            "c_restore_noB": pooled_mean(mb, "restore"),
-            "pi_mesc": pooled_mean(ms, "pi"),
-            "ci_mesc": pooled_mean(ms, "ci"),
-            "pi_noCS": pooled_mean(mn, "pi"),
-            "ci_noCS": pooled_mean(mn, "ci"),
+            "c_save": _pm(ms, "save"),
+            "c_restore": _pm(ms, "restore"),
+            "c_save_noB": _pm(mb, "save"),
+            "c_restore_noB": _pm(mb, "restore"),
+            "pi_mesc": _pm(ms, "pi"),
+            "ci_mesc": _pm(ms, "ci"),
+            "pi_noCS": _pm(mn, "pi"),
+            "ci_noCS": _pm(mn, "ci"),
         }
         pi_sp = row["pi_noCS"] / max(row["pi_mesc"], 1.0)
         ci_sp = row["ci_noCS"] / max(row["ci_mesc"], 1.0)

@@ -200,6 +200,15 @@ def measure(spec, skip_equivalence: bool = False):
                         spec["duration"])
         results[engine], samples = _timed(fn)
         engines[engine] = _stats(samples, n)
+    # per-step XLA kernel count of the compiled lockstep body at the
+    # production chunk shape — the grouped-carry refactor's tracked
+    # metric (see core/simulator_jit.lockstep_kernel_count)
+    from repro.core.simulator_jit import (_STREAM_CHUNK,
+                                          lockstep_kernel_count)
+    nk = min(n, _STREAM_CHUNK)
+    engines["jit"]["xla_kernels"] = lockstep_kernel_count(
+        tasksets[:nk], lib, policy, seeds=seeds[:nk],
+        duration=spec["duration"])
 
     # reuse the timed sampled-corpus runs; only the two nominal-profile
     # runs inside the check are freshly simulated
@@ -227,6 +236,14 @@ def load(path: Path) -> dict:
 
 
 def print_delta(section: str, new: dict, baseline: dict) -> None:
+    base_schema = baseline.get("schema_version")
+    if base_schema != SCHEMA_VERSION:
+        # an old-schema baseline (e.g. the v1 layout without samples/
+        # spread) must not KeyError the delta report — warn and skip
+        print(f"# baseline schema v{base_schema} != v{SCHEMA_VERSION} "
+              "— skipping perf delta (refresh the baseline by "
+              "committing this run's BENCH_sim.json)")
+        return
     base = baseline.get("sections", {}).get(section)
     if not base:
         print(f"# no committed baseline for section {section!r}")
@@ -297,6 +314,8 @@ def main() -> None:
         e = result["engines"][eng]
         print(f"{eng},{e['seconds']}s,{e['points_per_sec']}pts/s,"
               f"spread={e['spread_pct']}%")
+    print(f"jit_kernels,{section},"
+          f"{result['engines']['jit']['xla_kernels']}")
     print(f"speedup,vec_vs_event,{result['speedup_vec_vs_event']}x")
     print(f"speedup,jit_vs_vec,{result['speedup_jit_vs_vec']}x")
     eq = result["equivalence"]

@@ -97,6 +97,15 @@ class AggSamples:
     def __len__(self) -> int:
         return self.n
 
+    @property
+    def mean(self) -> float:
+        """Mean of the aggregated samples; NaN for an empty aggregate
+        (a run with zero blocking/save/restore events is normal — it
+        must not raise ``ZeroDivisionError`` in a metrics pipeline)."""
+        if self.n == 0:
+            return float("nan")
+        return self.total / self.n
+
     def __eq__(self, other) -> bool:
         return (isinstance(other, AggSamples)
                 and self.total == other.total and self.n == other.n)

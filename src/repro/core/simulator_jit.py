@@ -39,10 +39,74 @@ lockstep step on CPU).  Consequences:
 (``repro.experiments.spec``), so jit results never collide with event-
 or vec-engine cache entries.
 
+Grouped carry layout
+--------------------
+XLA:CPU pays a ~flat dispatch cost per emitted kernel inside a
+``while_loop`` body, so the loop carry is grouped into a handful of
+dtype-homogeneous tensors, each written by ONE fused pass per step,
+instead of the ~38 individually-updated per-field arrays of the first
+jit engine (measured kernel counts: ``lockstep_kernel_count``, logged
+into ``BENCH_sim.json`` by ``benchmarks/perf_sim.py``):
+
+  * ``flags`` — one ``(P, T)`` int32 *bitfield* holding all eight small
+    per-task state fields (status, pc, cause, budget_overrun,
+    data_in_accel, released_in_hi, ctx_valid, ctx_kept) plus the
+    per-task release counter: one gather yields every field of a task,
+    and one 5-write read-modify-write chain replaces eight separate
+    masked-write kernels at *fewer* total element passes;
+  * six ``(P, T)`` float64 event/time arrays (exec_cy, demand,
+    job_deadline, blocked_since, next_release, tick_release) — kept
+    separate on purpose: stacking them into one ``(P, 6, T)`` block
+    measures *slower* on XLA:CPU (the concatenate defeats loop fusion);
+  * four ``(P, T)`` int32 byte-count arrays (res_bytes, acc_bytes,
+    ctx_acc, ctx_spad; residency cap 256 KiB and accumulator cap
+    64 KiB do not fit one int32 together);
+  * the pending-interrupt table as ``(P, K)`` float64 ``ev_time`` plus
+    one ``(P, K)`` int32 ``ev_pay`` payload (``tid * 4 + kind``),
+    merging the old tid/kind pair;
+  * ``pi`` — one packed ``(P, 24)`` int32 per-point block: mode,
+    running task, locked banks, resident-LO count, active/HI counts,
+    alive + overflow bits, then the 16 int metric counters; written by
+    ONE fused column-onehot where-chain + add-chain (assembling the
+    same block via stack/concatenate measures ~2.7x slower per step —
+    XLA:CPU materializes concat operands as separate thunks);
+  * ``pf`` — one packed ``(P, 14)`` float64 per-point block: clock,
+    accelerator-free time, run-started stamp, mode stamp, CS-tick
+    time, then the 9 float metric accumulators; same single fused
+    write.
+
+Stale-interrupt pruning (the step's compaction pass)
+----------------------------------------------------
+A pending finish/overrun entry ``(tid, t_e)`` is *provably dead* — it
+can never pass the firing guard ``running == tid and status[tid] ==
+RUNNING`` in any future — when, at the end of a step, task ``tid`` has
+no live job (status PENDING) and ``t_e < next_release[tid]``: a
+PENDING task can only become RUNNING at/after its next release, so at
+time ``t_e`` it is still PENDING and the guard fails.  In the event
+engine a guard-failing pop is a pure heap pop — no advance, no metric,
+no state change — so removing the entry early is unobservable
+(bit-exactness vs the unpruned NumPy engine pinned by the nominal CI
+gate and a hypothesis property test).  The common producer of such
+entries is a HI job whose sampled demand stays below C_LO (probability
+``1 - overrun_prob`` per HI job): its overrun timer at
+``dispatch + (C_LO - exec)`` outlives the finish at
+``dispatch + (demand - exec)``, and once the job completes the task is
+PENDING with a next release typically far beyond the timer.  Every
+*other* stale-entry class fires strictly before its superseding event
+(within one job, ``at + rem`` and ``at + C_LO - exec`` are
+nondecreasing across re-dispatches, because execution time gained
+never exceeds wall time elapsed) while its task may be running again —
+those entries MUST be replayed, because their guarded pop calls the
+advance and checkpoints the integer-floored residency growth of
+``note_execution``; the pruning pass keeps them, exactly as the NumPy
+engines replay them.  Pruning both shrinks the fixed-width table's
+common-case occupancy (making the double-on-overflow retry ladder
+rarer) and removes the dead entries' no-op pops from the lockstep
+(fewer ``while_loop`` iterations).
+
 Implementation notes
 --------------------
-  * All per-point state lives in a flat dict-of-``jnp``-array carry;
-    static per-batch tables (priorities, periods, program boundary
+  * Static per-batch tables (priorities, periods, program boundary
     tables) are traced arguments, so one compilation serves every batch
     of the same shape/policy class.
   * The pending finish/overrun interrupt table is fixed-width (XLA
@@ -50,10 +114,15 @@ Implementation notes
     overflow flag; the affected points are re-run in small padded
     sub-batches at doubled widths (``_run_chunk``) — counter-based RNG
     makes every retry bit-deterministic and results independent of
-    batch composition.
+    batch composition.  A point still overflowing at the maximum width
+    raises a point-identified error instead of returning metrics from
+    a saturated table.  ``REPRO_JIT_TABLE_WIDTH`` /
+    ``REPRO_JIT_TABLE_MAX`` override the ladder bounds (CI shrinks
+    them to exercise the ladder and the error path every run).
   * Scheduler aggregates (active/HI counts, locked banks, resident-LO
-    counts) ride in the carry and are updated incrementally at the
-    NumPy engine's sites; pick_next keys are rank-compressed int32.
+    counts) ride in the packed ``pi`` block and are updated
+    incrementally at the NumPy engine's sites; pick_next keys are
+    rank-compressed int32.
   * Chunks are streamed from a small host thread pool
     (``default_streams``, ``REPRO_JIT_STREAMS``): the compiled loop
     releases the GIL, so independent chunks overlap on separate cores
@@ -70,6 +139,7 @@ from __future__ import annotations
 
 import functools
 import os
+import re
 from concurrent.futures import ThreadPoolExecutor
 from typing import Dict, List, Optional, Sequence
 
@@ -103,10 +173,18 @@ from repro.core.task import TaskParams
 # host-side double-on-overflow retry ladder, and the padded sub-batch
 # size retries are grouped into (bounds compilation variants).  The
 # NumPy engine's on-demand table settles at 32-64 on the reference
-# corpora, so starting at 64 makes the retry the rare path.
+# corpora; with the stale-interrupt pruning pass the common-case
+# occupancy is lower still, so starting at 64 makes the retry the
+# rare path.  REPRO_JIT_TABLE_WIDTH / REPRO_JIT_TABLE_MAX override
+# both bounds (validated in _env_int).
 _K0 = 64
 _K_MAX = 1024
 _RETRY_BUCKET = 64
+
+# compile-time switch for the stale-interrupt pruning pass; part of
+# the compilation cache key.  Only tests flip it (to prove pruning is
+# semantics-free by diffing against the unpruned graph).
+_PRUNE_STALE = True
 
 # lockstep width per compiled chunk: small enough to stay
 # cache-resident and to give the stream threads work to overlap,
@@ -118,21 +196,48 @@ _STREAM_CHUNK = 64
 # keys (every real key is rank * (T+1) + column << 2**30)
 _EMPTY32 = 2 ** 30
 
-# Packed per-point metric layouts: one int32 counter array ``mi`` and
-# one float64 accumulator array ``mf`` in the carry, each updated by a
-# single fused add-chain per step (one XLA kernel instead of ~15).
-# int counters: [jobs_lo, jobs_hi, done_lo, done_hi, miss_lo, miss_hi,
-#                mbm_lo, mbm_tr, mbm_hi, lo_rel_hi, lo_done_hi,
-#                cs_count, pi_n, ci_n, save_n, restore_n]
+# ---- flags: the (P, T) int32 per-task bitfield -----------------------
+# [1:0] status (PEND/READY/RUN/INT)   [2] pc>0     [4:3] blocking cause
+# [5] budget_overrun   [6] data_in_accel   [7] released_in_hi
+# [8] ctx_valid        [9] ctx_kept        [30:10] release counter
+_FL_ST_M = 3
+_FL_PC_SH = 2
+_FL_CZ_SH = 3
+_FL_BO_SH = 5
+_FL_DIA_SH = 6
+_FL_RH_SH = 7
+_FL_CV_SH = 8
+_FL_CK_SH = 9
+_FL_RC_SH = 10          # 21 bits: < 2**21 accepted releases per task
+_FL_CZ_M = 3 << _FL_CZ_SH
+
+# ---- pi: the packed (P, 24) int32 per-point block --------------------
+# [0] mode  [1] running tid  [2] locked banks  [3] resident-LO count
+# [4] active count  [5] active-HI count  [6] alive  [7] table overflow
+# [8:24] int metric counters (_MI_* offsets are relative to _I_MI):
+#   [jobs_lo, jobs_hi, done_lo, done_hi, miss_lo, miss_hi, mbm_lo,
+#    mbm_tr, mbm_hi, lo_rel_hi, lo_done_hi, cs_count, pi_n, ci_n,
+#    save_n, restore_n]
+(_I_MODE, _I_RUN, _I_LOCKED, _I_RESLO, _I_ACT, _I_HI,
+ _I_ALIVE, _I_OVF) = range(8)
+_I_MI = 8
 _MI_JOBS, _MI_DONE, _MI_MISS, _MI_MBM = 0, 2, 4, 6
 _MI_LO_REL, _MI_LO_DONE, _MI_CS = 9, 10, 11
 _MI_PI_N, _MI_CI_N, _MI_SAVE_N, _MI_RESTORE_N = 12, 13, 14, 15
 _MI_W = 16
-# float accumulators: [exec_sum, overhead, pi_sum, ci_sum, save_sum,
-#                      restore_sum, mode_cycles_lo/tr/hi]
+_PI_W = _I_MI + _MI_W
+
+# ---- pf: the packed (P, 14) float64 per-point block ------------------
+# [0] now  [1] accel_free_at  [2] run_started  [3] last_mode_stamp
+# [4] tick_cs  [5:14] float metric accumulators (_MF_* offsets are
+# relative to _F_MF): [exec_sum, overhead, pi_sum, ci_sum, save_sum,
+# restore_sum, mode_cycles_lo/tr/hi]
+_F_NOW, _F_FREE, _F_RSTART, _F_LMS, _F_TICKCS = range(5)
+_F_MF = 5
 _MF_EXEC, _MF_OVERHEAD, _MF_PI, _MF_CI = 0, 1, 2, 3
 _MF_SAVE, _MF_RESTORE, _MF_MC = 4, 5, 6
 _MF_W = 9
+_PF_W = _F_MF + _MF_W
 
 
 def require_jax(backend: str = "jit") -> None:
@@ -144,12 +249,37 @@ def require_jax(backend: str = "jit") -> None:
             "`pip install jax`) or use select_backend='numpy'")
 
 
+def _env_int(name: str, default: int, minimum: int = 1) -> int:
+    """Read a positive-integer env override, rejecting junk loudly."""
+    raw = os.environ.get(name)
+    if raw is None or not raw.strip():
+        return default
+    try:
+        val = int(raw)
+    except ValueError:
+        raise ValueError(
+            f"{name}={raw!r} is not an integer; set {name} to an "
+            f"integer >= {minimum} or unset it") from None
+    if val < minimum:
+        raise ValueError(
+            f"{name}={raw!r} must be >= {minimum}; fix or unset {name}")
+    return val
+
+
+def _table_width() -> int:
+    return _env_int("REPRO_JIT_TABLE_WIDTH", _K0)
+
+
+def _table_max(k0: int) -> int:
+    return max(_env_int("REPRO_JIT_TABLE_MAX", _K_MAX), k0)
+
+
 # ----------------------------------------------------------------------
 # Compiled step (built once per static policy/profile class)
 # ----------------------------------------------------------------------
 
 def _build_run(use_banks: bool, drop_lo: bool, preempt: str,
-               nominal: bool):
+               nominal: bool, prune: bool):
     """Compile the whole-simulation while_loop for one static config.
 
     Everything dynamic (per-batch tables, scalars, carry) is a traced
@@ -158,20 +288,22 @@ def _build_run(use_banks: bool, drop_lo: bool, preempt: str,
 
     XLA:CPU pays a ~flat dispatch cost per emitted kernel inside a
     while_loop, so the body is shaped to minimize *kernel count*, not
-    flops:
+    flops (see the module docstring's carry-layout notes):
 
-      * per-point single-column reads are gathers (cheap); every
-        (P, T) state array receives exactly ONE fused where-chain
-        write per step (XLA CPU scatters are pathologically slow, and
-        one chain beats four separate masked writes);
+      * per-point single-column reads are gathers (cheap), and the
+        ``flags`` bitfield makes one gather serve every small per-task
+        field of a column; every carried array receives exactly ONE
+        fused write pass per step (XLA CPU scatters are pathologically
+        slow, and one chain beats separate masked writes);
       * deferring all writes to the end of the step is sound because
         the four event classes are disjoint per point and handlers
         only touch their own point's row — the few same-row
         read-after-write hazards (advance -> dispatch, finish ->
-        scheduler) are resolved by deriving the post-write values as
-        (P,)-scalars instead of re-reading the array;
-      * metric counters live in two packed arrays (``mi`` int32,
-        ``mf`` float64) updated by one fused add-chain each;
+        scheduler, overrun -> dispatch on the same column) are
+        resolved by deriving the post-write values as (P,)-scalars
+        instead of re-reading the array;
+      * metric counters live in the packed ``pi``/``pf`` tails and are
+        updated by one fused add-chain each;
       * the demand draw is a branch-free splitmix64 hash (a handful of
         fused u64 ops; ``jax.random``'s threefry costs ~50 kernels per
         step on CPU).
@@ -210,7 +342,7 @@ def _build_run(use_banks: bool, drop_lo: bool, preempt: str,
         return out
 
     def _apply_inc(M, incs):
-        """One fused add-chain over a packed metric array; ``incs`` are
+        """One fused add-chain over a packed metric block; ``incs`` are
         (column, mask, value) with scalar or per-point columns."""
         cols = jnp.arange(M.shape[1])
         out = M
@@ -233,6 +365,9 @@ def _build_run(use_banks: bool, drop_lo: bool, preempt: str,
 
     def _banks(nbytes):
         return (nbytes + _BB - 1) // _BB
+
+    def _bit(fl, sh):
+        return ((fl >> sh) & 1) != 0
 
     def _boundaries(tb, pids, off):
         """Vectorized Program.next_{instruction,operator}_boundary via
@@ -286,27 +421,45 @@ def _build_run(use_banks: bool, drop_lo: bool, preempt: str,
         apply the handlers as masked updates — the jit counterpart of
         ``_VecBatch.run``'s loop body, one event class per point.  The
         scheduler aggregates (locked banks, resident-LO / active / HI
-        counts) ride in the carry and are updated incrementally at the
-        NumPy engine's sites; every (P, T) array is written once, at
-        the end (see ``_build_run``)."""
+        counts) ride in the packed ``pi`` block and are updated
+        incrementally at the NumPy engine's sites; every carried array
+        is written once, at the end (see ``_build_run``)."""
         T = tb["valid"].shape[1]
         K = c["ev_time"].shape[1]
         next_tick = lambda t: (jnp.floor_divide(t, sc["t_sr"]) + 1) \
             * sc["t_sr"]
         mi_inc, mf_inc = [], []
 
+        # ---- unpack the grouped carry (slices fuse into consumers) ---
+        flags = c["flags"]
+        status_a = flags & _FL_ST_M
+        pi, pf = c["pi"], c["pf"]
+        mode0 = pi[:, _I_MODE]
+        run0 = pi[:, _I_RUN]
+        locked0 = pi[:, _I_LOCKED]
+        res_lo0 = pi[:, _I_RESLO]
+        act0 = pi[:, _I_ACT]
+        hic0 = pi[:, _I_HI]
+        alive0 = pi[:, _I_ALIVE] != 0
+        ovf0 = pi[:, _I_OVF] != 0
+        now0 = pf[:, _F_NOW]
+        free0 = pf[:, _F_FREE]
+        rs0 = pf[:, _F_RSTART]
+        lms0 = pf[:, _F_LMS]
+        tcs0 = pf[:, _F_TICKCS]
+
         # ---- candidate argmin over the four event sources ------------
+        # hierarchical: per-source row mins feed a tiny (P, 4) argmin
+        # (a single concatenated (P, 2T+K+1) pop has fewer kernels but
+        # measures slower on XLA:CPU — the concat defeats loop fusion)
         rel_min = c["next_release"].min(axis=1)
         tickR_min = c["tick_release"].min(axis=1)
         ev_min = c["ev_time"].min(axis=1)
-        cand = jnp.stack([rel_min, tickR_min, ev_min, c["tick_cs"]],
-                         axis=1)
+        cand = jnp.stack([rel_min, tickR_min, ev_min, tcs0], axis=1)
         j = jnp.argmin(cand, axis=1)
         tmin = cand.min(axis=1)
-        fire = c["alive"] & (tmin <= sc["duration"])
-        c["alive"] = fire            # non-firing points are done forever
-        now = jnp.where(fire, tmin, c["now"])
-        c["now"] = now
+        fire = alive0 & (tmin <= sc["duration"])
+        now = jnp.where(fire, tmin, now0)
         is_rel = fire & (j == 0)
         is_tickR = fire & (j == 1)
         is_cs = fire & (j == 3)
@@ -315,89 +468,89 @@ def _build_run(use_banks: bool, drop_lo: bool, preempt: str,
         # ---- release events (no scheduler pass of their own) ---------
         rcol = jnp.argmin(c["next_release"], axis=1)
         ohR = _oh(rcol, T)
-        st_r = _get(c["status"], rcol)
+        fl_r = _get(flags, rcol)
+        st_r = fl_r & _FL_ST_M
         hi_r = _get(tb["is_hi"], rcol)
         crit_r = hi_r.astype(jnp.int32)
         # previous job still live: count one miss, skip this release
         fresh_miss = is_rel & (st_r != _PEND) \
             & (_get(c["job_deadline"], rcol) != jnp.inf)
         mi_inc.append((_MI_MISS + crit_r, fresh_miss, 1))
-        mi_inc.append((_MI_MBM + c["mode"], fresh_miss, 1))
+        mi_inc.append((_MI_MBM + mode0, fresh_miss, 1))
         accept = is_rel & (st_r == _PEND)
         if drop_lo:                   # AMC: LO not released off-LO
-            accept = accept & (hi_r | (c["mode"] == _LO))
-        c["act_cnt"] = c["act_cnt"] + accept
-        c["hi_cnt"] = c["hi_cnt"] + (accept & hi_r)
+            accept = accept & (hi_r | (mode0 == _LO))
+        act1 = act0 + accept
+        hic1 = hic0 + (accept & hi_r)
         c_lo_r = _get(tb["c_lo"], rcol)
+        n_r = fl_r >> _FL_RC_SH
         if nominal:                   # zero-jitter profile: no draws
             dem = c_lo_r
         else:
-            n_r = _get(c["rel_cnt"], rcol)
             dem = _sample_demand(tb, sc, rcol, n_r, hi_r, c_lo_r)
-            c["rel_cnt"] = _chain(c["rel_cnt"], (ohR, accept, n_r + 1))
         mi_inc.append((_MI_JOBS + crit_r, accept, 1))
-        rel_hi = accept & ~hi_r & (c["mode"] != _LO)
+        rel_hi = accept & ~hi_r & (mode0 != _LO)
         mi_inc.append((_MI_LO_REL, rel_hi, 1))
 
         # ---- scheduler-tick pops (defer while a CS is in flight) -----
         ohT = _oh(jnp.argmin(c["tick_release"], axis=1), T)
-        c["tick_cs"] = jnp.where(is_cs, jnp.inf, c["tick_cs"])
+        tcs1 = jnp.where(is_cs, jnp.inf, tcs0)
         tick_mask = is_tickR | is_cs
-        busy_t = tick_mask & (now < c["accel_free_at"])
-        c["tick_cs"] = jnp.where(
-            busy_t, jnp.minimum(c["tick_cs"],
-                                next_tick(c["accel_free_at"])),
-            c["tick_cs"])
+        busy_t = tick_mask & (now < free0)
+        tcs2 = jnp.where(busy_t,
+                         jnp.minimum(tcs1, next_tick(free0)), tcs1)
         tick_sched = tick_mask & ~busy_t
 
         # ---- pending finish/overrun interrupts: pop + guard ----------
         icol = jnp.argmin(c["ev_time"], axis=1)
         ohI = _oh(icol, K)
-        itid = _get(c["ev_tid"], icol)
-        ikind = _get(c["ev_kind"], icol)
+        pay_i = _get(c["ev_pay"], icol)
+        itid = pay_i >> 2
+        ikind = pay_i & 3
         tidc = jnp.maximum(itid, 0)
         ohTid = _oh(tidc, T)
-        guard = is_int & (c["running"] == itid) \
-            & (_get(c["status"], tidc) == _RUN)
+        fl_tid = _get(flags, tidc)
+        guard = is_int & (run0 == itid) \
+            & ((fl_tid & _FL_ST_M) == _RUN)
 
         # ---- one advance for every point that needs it this step -----
         # (the running column is shared by the advance, the interrupt
         # target and the dispatch drain, so the post-advance values are
         # carried forward as scalars instead of array re-reads)
-        runc = jnp.maximum(c["running"], 0)
+        runc = jnp.maximum(run0, 0)
         ohRun = _oh(runc, T)
-        elapsed = now - c["run_started"]
-        do_adv = (guard | tick_sched) & (c["running"] >= 0) \
-            & (elapsed > 0)
+        elapsed = now - rs0
+        do_adv = (guard | tick_sched) & (run0 >= 0) & (elapsed > 0)
         exec_r0 = _get(c["exec_cy"], runc)
         exec_r1 = jnp.where(do_adv, exec_r0 + elapsed, exec_r0)
         mf_inc.append((_MF_EXEC, do_adv, elapsed))
-        c["run_started"] = jnp.where(do_adv, now, c["run_started"])
+        rs1 = jnp.where(do_adv, now, rs0)
         # GemminiRT.note_execution (exact integer growth model)
         etab_r = _get(tb["etab"], runc).astype(jnp.int64) * _BB
         grow = jnp.floor(elapsed * DMA_BYTES_PER_CYCLE).astype(jnp.int64)
         if use_banks:
-            have = _get(c["r_bytes"], runc).astype(jnp.int64)
-            free = (_NBANKS - c["locked"]).astype(jnp.int64)
+            have = _get(c["res_bytes"], runc).astype(jnp.int64)
+            free = (_NBANKS - locked0).astype(jnp.int64)
             growing = do_adv & (have < etab_r) & (free > 0)
             want = jnp.minimum(jnp.minimum(etab_r, have + free * _BB),
                                have + grow)
             rb_grown = jnp.maximum(have, want)
             rb_1 = jnp.where(growing, rb_grown, have)
-            c["locked"] = c["locked"] + jnp.where(
+            locked1 = locked0 + jnp.where(
                 growing, _banks(rb_grown) - _banks(have), 0).astype(
                     jnp.int32)
             went = growing & (have == 0) & (rb_grown > 0) \
                 & ~_get(tb["is_hi"], runc)
-            c["res_lo"] = c["res_lo"] + went
+            res_lo1 = res_lo0 + went
         else:
-            have = _get(c["spad"], runc).astype(jnp.int64)
+            have = _get(c["res_bytes"], runc).astype(jnp.int64)
             growing = do_adv & (have < etab_r)
-            others = c["spad"].sum(axis=1) - have
+            others = c["res_bytes"].sum(axis=1) - have
             want = jnp.minimum(
                 jnp.minimum(etab_r, jnp.maximum(_CAP - others, 0)),
                 have + grow)
             rb_1 = jnp.where(growing, jnp.maximum(have, want), have)
+            locked1, res_lo1 = locked0, res_lo0
         acc_r0 = _get(c["acc_bytes"], runc).astype(jnp.int64)
         filling = do_adv & (acc_r0 < ACCUM_BYTES)
         grow_acc = jnp.floor_divide(
@@ -417,61 +570,55 @@ def _build_run(use_banks: bool, drop_lo: bool, preempt: str,
         mi_inc.append((_MI_DONE + crit_i, done_m, 1))
         late = done_m & (now > ddl_i)
         mi_inc.append((_MI_MISS + crit_i, late, 1))
-        mi_inc.append((_MI_MBM + c["mode"], late, 1))
-        surv = done_m & _get(c["released_in_hi"], tidc) & (now <= ddl_i)
+        mi_inc.append((_MI_MBM + mode0, late, 1))
+        surv = done_m & _bit(fl_tid, _FL_RH_SH) & (now <= ddl_i)
         mi_inc.append((_MI_LO_DONE, surv, 1))
-        c["act_cnt"] = c["act_cnt"] - done_m
-        c["hi_cnt"] = c["hi_cnt"] - (done_m & hi_i)
+        act2 = act1 - done_m
+        hic2 = hic1 - (done_m & hi_i)
         # GemminiRT.evict
         mf_inc.append((_MF_OVERHEAD, done_m, float(FLUSH_CYCLES)))
         if use_banks:
-            c["locked"] = c["locked"] - jnp.where(
+            locked2 = locked1 - jnp.where(
                 done_m, _banks(rb_1), 0).astype(jnp.int32)
-            c["res_lo"] = c["res_lo"] - (done_m & (rb_1 > 0) & ~hi_i)
-        c["running"] = jnp.where(done_m, -1, c["running"])
+            res_lo2 = res_lo1 - (done_m & (rb_1 > 0) & ~hi_i)
+        else:
+            locked2, res_lo2 = locked1, res_lo1
+        run1 = jnp.where(done_m, -1, run0)
         # overrun: flag the budget excess, degrade LO -> transition
         fire_o = guard & (ikind == 2) \
             & (exec_r1 >= _get(tb["c_lo"], tidc) - 1e-6) \
-            & ~_get(c["budget_overrun"], tidc)
-        was_lo = fire_o & (c["mode"] == _LO)
-        mf_inc.append((_MF_MC + c["mode"], was_lo,
-                       now - c["last_mode_stamp"]))
-        c["last_mode_stamp"] = jnp.where(was_lo, now,
-                                         c["last_mode_stamp"])
-        c["mode"] = jnp.where(was_lo, _TRANS, c["mode"])
+            & ~_bit(fl_tid, _FL_BO_SH)
+        was_lo = fire_o & (mode0 == _LO)
+        mf_inc.append((_MF_MC + mode0, was_lo, now - lms0))
+        lms1 = jnp.where(was_lo, now, lms0)
+        mode1 = jnp.where(was_lo, _TRANS, mode0)
 
         # ---- scheduler pass ------------------------------------------
         sched = tick_sched | done_m | fire_o
         # a stale event can land mid-switch: defer like a tick re-push
-        busy_s = sched & (now < c["accel_free_at"])
-        c["tick_cs"] = jnp.where(
-            busy_s, jnp.minimum(c["tick_cs"],
-                                next_tick(c["accel_free_at"])),
-            c["tick_cs"])
+        busy_s = sched & (now < free0)
+        tcs3 = jnp.where(busy_s,
+                         jnp.minimum(tcs2, next_tick(free0)), tcs2)
         sched = sched & ~busy_s
         # mode progression (SS IV) off the carried aggregates
-        mt = sched & (c["mode"] != _LO)
-        to_hi = mt & (c["mode"] == _TRANS) & (c["res_lo"] <= 1)
-        to_lo = mt & ~to_hi & (c["act_cnt"] == 0)
-        new_mode = jnp.where(to_hi, _HI,
-                             jnp.where(to_lo, _LO, c["mode"]))
-        chg = new_mode != c["mode"]
-        mf_inc.append((_MF_MC + c["mode"], chg,
-                       now - c["last_mode_stamp"]))
-        c["last_mode_stamp"] = jnp.where(chg, now,
-                                         c["last_mode_stamp"])
-        c["mode"] = new_mode
+        mt = sched & (mode1 != _LO)
+        to_hi = mt & (mode1 == _TRANS) & (res_lo2 <= 1)
+        to_lo = mt & ~to_hi & (act2 == 0)
+        mode2 = jnp.where(to_hi, _HI, jnp.where(to_lo, _LO, mode1))
+        chg = mode2 != mode1
+        mf_inc.append((_MF_MC + mode1, chg, now - lms1))
+        lms2 = jnp.where(chg, now, lms1)
         # pick_next via masked min over the rank-compressed
         # (priority, column) keys; the finishing task left the active
         # set this step, which the deferred status write hasn't
         # recorded yet — mask its column out here
-        active = (c["status"] != _PEND) & tb["valid"] \
+        active = (status_a != _PEND) & tb["valid"] \
             & ~(ohTid & done_m[:, None])
         act_key = jnp.where(active, tb["key32"], _EMPTY32).min(axis=1)
         hi_key = jnp.where(active & tb["is_hi"], tb["key32"],
                            _EMPTY32).min(axis=1)
-        hi_active = c["hi_cnt"] > 0
-        off_lo = c["mode"] != _LO
+        hi_active = hic2 > 0
+        off_lo = mode2 != _LO
         if drop_lo:                   # AMC: LO never runs off-LO
             key = jnp.where(off_lo, hi_key, act_key)
         else:
@@ -479,11 +626,12 @@ def _build_run(use_banks: bool, drop_lo: bool, preempt: str,
             # transition mode: a LO task may run only while its data
             # is still resident (rare — branch around the extra pass,
             # correcting for this step's deferred writes)
-            need_tr = sched & off_lo & ~hi_active \
-                & (c["mode"] == _TRANS)
+            need_tr = sched & off_lo & ~hi_active & (mode2 == _TRANS)
 
             def _tr_keys(_):
-                resid = c["data_in_accel"] | (c["r_bytes"] > 0)
+                resid = _bit(flags, _FL_DIA_SH)
+                if use_banks:
+                    resid = resid | (c["res_bytes"] > 0)
                 resid = resid & ~(ohTid & done_m[:, None])
                 if use_banks:
                     resid = resid | (ohRun
@@ -498,22 +646,22 @@ def _build_run(use_banks: bool, drop_lo: bool, preempt: str,
         nxt = (key % (T + 1)).astype(jnp.int32)
         nxt = jnp.where(key >= _EMPTY32, -1, nxt)
         # clear a stale running slot (event engine's defensive check)
-        cur = c["running"]
-        curc = jnp.maximum(cur, 0)
+        curc = jnp.maximum(run1, 0)
         ohC = _oh(curc, T)
-        stale = sched & (cur >= 0) \
-            & (_get(c["status"], curc) != _RUN)
-        c["running"] = jnp.where(stale, -1, c["running"])
+        fl_c = _get(flags, curc)
+        stale = sched & (run1 >= 0) & ((fl_c & _FL_ST_M) != _RUN)
+        run2 = jnp.where(stale, -1, run1)
         # ohC / curc stay valid: stale points get cur < 0, for which
         # every consumer below is masked out — and whenever a dispatch
         # drains a current task, curc equals runc (the point advanced
         # the same column this step), so rb_1 / acc_1 / exec_r1 are its
         # post-advance values
-        cur = c["running"]
+        cur = run2
         act_m = sched & (nxt >= 0) & (cur != nxt)
         # a displaced current task blocks the newcomer until the switch
         nxtc = jnp.maximum(nxt, 0)
         ohN = _oh(nxtc, T)
+        fl_n = _get(flags, nxtc)
         hi_n = _get(tb["is_hi"], nxtc)
         hi_c = _get(tb["is_hi"], curc)
         blocked = act_m & (cur >= 0)
@@ -523,10 +671,8 @@ def _build_run(use_banks: bool, drop_lo: bool, preempt: str,
         run_lo = (cur >= 0) & ~hi_c
         ci_shape = hi_n & run_lo
         cause_v = jnp.where(
-            ci_shape, jnp.where(c["mode"] != _LO, _C_CI, _C_CIQ),
-            _C_PI)
-        cz_1 = jnp.where(fresh_b, cause_v,
-                         _get(c["cause"], nxtc).astype(jnp.int32))
+            ci_shape, jnp.where(mode2 != _LO, _C_CI, _C_CIQ), _C_PI)
+        cz_1 = jnp.where(fresh_b, cause_v, (fl_n >> _FL_CZ_SH) & 3)
         if preempt == "none":         # cannot displace the running task
             act_m = act_m & (cur < 0)
 
@@ -542,12 +688,12 @@ def _build_run(use_banks: bool, drop_lo: bool, preempt: str,
         # context_save cost model (GemminiRT)
         acc_cy = _dma(acc_1)
         if use_banks:
-            need = _get(tb["eta"], nxtc) + c["locked"] > _NBANKS
+            need = _get(tb["eta"], nxtc) + locked2 > _NBANKS
             spadsave = need & (rb_1 > 0)
             remap_cy = _REMAP_CY
             resident = rb_1
         else:
-            resident = _get(c["spad"], curc).astype(jnp.int64)
+            resident = _get(c["res_bytes"], curc).astype(jnp.int64)
             resident = jnp.where(curc == runc, rb_1, resident)
             spadsave = resident > 0
             remap_cy = 0
@@ -556,53 +702,55 @@ def _build_run(use_banks: bool, drop_lo: bool, preempt: str,
         kept = ~spadsave
         sv = has_cur & spadsave
         # HI-mode LO->LO preemption: full eviction of the old LO data
-        lolo = has_cur & (c["mode"] == _HI) & ~hi_c & ~hi_n
+        lolo = has_cur & (mode2 == _HI) & ~hi_c & ~hi_n
         if use_banks:
-            c["locked"] = c["locked"] - jnp.where(
+            locked3 = locked2 - jnp.where(
                 sv, _banks(resident), 0).astype(jnp.int32)
-            c["res_lo"] = c["res_lo"] - (sv & ~hi_c)
+            res_lo3 = res_lo2 - (sv & ~hi_c)
             # the lolo eviction sees the residency left after the save
             rb_2 = jnp.where(sv, 0, rb_1)
-            c["locked"] = c["locked"] - jnp.where(
+            locked4 = locked3 - jnp.where(
                 lolo, _banks(rb_2), 0).astype(jnp.int32)
-            c["res_lo"] = c["res_lo"] - (lolo & (rb_2 > 0))
+            res_lo4 = res_lo3 - (lolo & (rb_2 > 0))
+        else:
+            locked4, res_lo4 = locked2, res_lo2
         mi_inc.append((_MI_CS, has_cur, 1))
         mf_inc.append((_MF_SAVE, has_cur, br_save.astype(jnp.float64)))
         mi_inc.append((_MI_SAVE_N, has_cur, 1))
         # context_restore for resumed tasks
-        resume = act_m & ((_get(c["pc"], nxtc) > 0)
-                          | (_get(c["status"], nxtc) == _INT))
-        has_ctx = _get(c["ctx_valid"], nxtc)
+        resume = act_m & (_bit(fl_n, _FL_PC_SH)
+                          | ((fl_n & _FL_ST_M) == _INT))
+        has_ctx = _bit(fl_n, _FL_CV_SH)
         ctx_acc_n = _get(c["ctx_acc"], nxtc).astype(jnp.int64)
         ctx_spad_n = _get(c["ctx_spad"], nxtc).astype(jnp.int64)
         acc_cy_r = jnp.where(has_ctx, _dma(ctx_acc_n), 0)
-        reload = resume & has_ctx & ~_get(c["ctx_kept"], nxtc) \
+        reload = resume & has_ctx & ~_bit(fl_n, _FL_CK_SH) \
             & (ctx_spad_n > 0)
         spad_cy_r = jnp.where(reload, _dma(ctx_spad_n), 0)
         br_rest = jnp.where(has_ctx,
                             acc_cy_r + spad_cy_r + _RESTORE_FIXED, 0)
         if use_banks:
             br_rest = br_rest + jnp.where(reload, _REMAP_CY, 0)
-            free_b = (_NBANKS - c["locked"]).astype(jnp.int64)
+            free_b = (_NBANKS - locked4).astype(jnp.int64)
             new_res = jnp.minimum(ctx_spad_n, free_b * _BB)
-            c["locked"] = c["locked"] + jnp.where(
+            locked5 = locked4 + jnp.where(
                 reload, _banks(new_res), 0).astype(jnp.int32)
-            c["res_lo"] = c["res_lo"] + (reload & (new_res > 0) & ~hi_n)
+            res_lo5 = res_lo4 + (reload & (new_res > 0) & ~hi_n)
         else:
             new_res = ctx_spad_n
+            locked5, res_lo5 = locked4, res_lo4
         mf_inc.append((_MF_RESTORE, resume, br_rest.astype(jnp.float64)))
         mi_inc.append((_MI_RESTORE_N, resume, 1))
         # commit the switch
         switch = jnp.where(has_cur, br_save, 0).astype(jnp.float64) \
             + jnp.where(resume, br_rest, 0).astype(jnp.float64)
         mf_inc.append((_MF_OVERHEAD, act_m, switch))
-        c["running"] = jnp.where(act_m, nxt, c["running"])
+        run3 = jnp.where(act_m, nxt, run2)
         # _record_unblock(nxt, at=now + switch)
         at = now + switch
         was_b = act_m & ~jnp.isnan(bsince_1)
         dt = at - bsince_1
-        cz = jnp.where((cz_1 == _C_CIQ) & (c["mode"] != _LO), _C_CI,
-                       cz_1)
+        cz = jnp.where((cz_1 == _C_CIQ) & (mode2 != _LO), _C_CI, cz_1)
         posd = was_b & (dt > 0)
         ci_m = posd & (cz == _C_CI)
         pi_m = posd & (cz != _C_CI)
@@ -610,60 +758,94 @@ def _build_run(use_banks: bool, drop_lo: bool, preempt: str,
         mi_inc.append((_MI_CI_N, ci_m, 1))
         mf_inc.append((_MF_PI, pi_m, dt))
         mi_inc.append((_MI_PI_N, pi_m, 1))
-        c["run_started"] = jnp.where(act_m, at, c["run_started"])
-        c["accel_free_at"] = jnp.where(act_m, at, c["accel_free_at"])
+        rs2 = jnp.where(act_m, at, rs1)
+        free1 = jnp.where(act_m, at, free0)
         # future events for the new running task
         exec_n = _get(c["exec_cy"], nxtc)
         rem = _get(c["demand"], nxtc) - exec_n
         c_lo_n = _get(tb["c_lo"], nxtc)
-        arm = act_m & hi_n & ~_get(c["budget_overrun"], nxtc) \
-            & (exec_n < c_lo_n)
+        arm = act_m & hi_n & ~_bit(fl_n, _FL_BO_SH) & (exec_n < c_lo_n)
         t_fin = at + rem
         t_ovr = at + (c_lo_n - exec_n)
-        # pending-interrupt slots: this step's pop frees a slot the
-        # pushes may immediately reuse (the event engine's heap does)
-        isfree = jnp.isinf(c["ev_time"]) | (ohI & is_int[:, None])
-        n_free = isfree.sum(axis=1)
-        oh1 = _oh(jnp.argmax(isfree, axis=1), K)
-        oh2 = _oh(jnp.argmax(isfree & ~oh1, axis=1), K)
-        do1 = act_m & (n_free >= 1)
-        do2 = arm & (n_free >= 2)
-        c["overflow"] = c["overflow"] | (act_m & (n_free < 1)) \
-            | (arm & (n_free < 2))
         ddl_new = now + _get(tb["deadline_rel"], rcol)
         nrel_new = now + _get(tb["period"], rcol)
         tr_new = next_tick(now)
 
+        # ---- flag-write values (one RMW per write site; see the
+        # conflict analysis in _build_run's docstring) ------------------
+        # release: fresh job — set READY, clear pc/budget_overrun, set
+        # released_in_hi, bump the release counter; keep cause/ctx bits
+        keep_r = _FL_CZ_M | (1 << _FL_DIA_SH) | (1 << _FL_CV_SH) \
+            | (1 << _FL_CK_SH)
+        fl_release = (fl_r & keep_r) | _READY \
+            | (rel_hi.astype(jnp.int32) << _FL_RH_SH) \
+            | ((n_r + 1) << _FL_RC_SH)
+        # finish: back to PENDING, data gone, context invalid
+        fl_done = fl_tid & ~jnp.int32(_FL_ST_M | (1 << _FL_DIA_SH)
+                                      | (1 << _FL_CV_SH))
+        # overrun: set budget_overrun (kept for non-dispatching points;
+        # folded into fl_cur below when the same column is displaced)
+        fl_fireo = fl_tid | (1 << _FL_BO_SH)
+        # displaced current task: INTERRUPTED + ctx snapshot bits.  An
+        # overrun fired on this very column this step (fire_o implies
+        # tidc == curc) — fold its budget_overrun bit in so the RMW
+        # does not resurrect the pre-step value
+        fl_c2 = fl_c | (fire_o.astype(jnp.int32) << _FL_BO_SH)
+        fl_cur = (fl_c2 & ~jnp.int32(_FL_ST_M | (1 << _FL_DIA_SH)
+                                     | (1 << _FL_CV_SH)
+                                     | (1 << _FL_CK_SH))) \
+            | _INT \
+            | ((kept & ~lolo).astype(jnp.int32) << _FL_DIA_SH) \
+            | (1 << _FL_CV_SH) \
+            | (kept.astype(jnp.int32) << _FL_CK_SH)
+        # dispatched task: RUNNING + pc, blocking cause resolved, data
+        # present again when a context reload happened
+        st_n = jnp.where(act_m, _RUN, fl_n & _FL_ST_M)
+        pc_n = jnp.where(act_m, 1, (fl_n >> _FL_PC_SH) & 1)
+        cz_n = jnp.where(was_b, _C_NONE,
+                         jnp.where(fresh_b, cause_v,
+                                   (fl_n >> _FL_CZ_SH) & 3))
+        dia_n = jnp.where(resume & has_ctx, 1, (fl_n >> _FL_DIA_SH) & 1)
+        keep_n = ~jnp.int32(_FL_ST_M | (1 << _FL_PC_SH) | _FL_CZ_M
+                            | (1 << _FL_DIA_SH))
+        fl_nxt = (fl_n & keep_n) | st_n | (pc_n << _FL_PC_SH) \
+            | (cz_n << _FL_CZ_SH) | (dia_n << _FL_DIA_SH)
+
         # ---- barrier, then deferred writes: one fused pass per array -
         # XLA:CPU loop fusion re-evaluates a shared producer once per
         # fused consumer; the barrier materializes every (P,) scalar
-        # and one-hot mask exactly once, so the ~20 write chains below
-        # are each a cheap read-modify-select pass
-        (ohR, ohT, ohI, ohTid, ohRun, ohC, ohN, oh1, oh2,
+        # and one-hot mask exactly once, so the write chains below are
+        # each a cheap read-modify-select pass
+        (ohR, ohT, ohI, ohTid, ohRun, ohC, ohN,
          is_rel, is_tickR, is_int, accept, fresh_miss, done_m, fire_o,
          act_m, has_cur, resume, has_ctx, reload, sv, lolo, was_b,
-         fresh_b, do_adv, growing, filling, do1, do2, dem, exec_r2,
-         rb_1, acc_1, new_res, ctx_acc_n, resident, kept, spadsave,
-         t_fin, t_ovr, cause_v, nxtc, now, ddl_new, nrel_new, tr_new,
-         rel_hi, mi_inc, mf_inc) = jax.lax.optimization_barrier(
-            (ohR, ohT, ohI, ohTid, ohRun, ohC, ohN, oh1, oh2,
-             is_rel, is_tickR, is_int, accept, fresh_miss, done_m,
-             fire_o, act_m, has_cur, resume, has_ctx, reload, sv, lolo,
-             was_b, fresh_b, do_adv, growing, filling, do1, do2, dem,
-             exec_r2, rb_1, acc_1, new_res, ctx_acc_n, resident, kept,
-             spadsave, t_fin, t_ovr, cause_v, nxtc, now, ddl_new,
-             nrel_new, tr_new, rel_hi, mi_inc, mf_inc))
-        c["ev_time"] = _chain(c["ev_time"], (ohI, is_int, jnp.inf),
-                              (oh1, do1, t_fin), (oh2, do2, t_ovr))
-        c["ev_tid"] = _chain(c["ev_tid"], (oh1, do1, nxtc),
-                             (oh2, do2, nxtc))
-        c["ev_kind"] = _chain(c["ev_kind"], (oh1, do1, 1), (oh2, do2, 2))
+         fresh_b, do_adv, growing, filling, arm, dem, exec_r2,
+         rb_1, acc_1, new_res, ctx_acc_n, resident, spadsave,
+         t_fin, t_ovr, nxtc, now, ddl_new, nrel_new, tr_new,
+         fl_release, fl_done, fl_fireo, fl_cur, fl_nxt,
+         mode2, run3, locked5, res_lo5, act2, hic2, fire,
+         free1, rs2, lms2, tcs3, mi_inc, mf_inc) = \
+            jax.lax.optimization_barrier(
+                (ohR, ohT, ohI, ohTid, ohRun, ohC, ohN,
+                 is_rel, is_tickR, is_int, accept, fresh_miss, done_m,
+                 fire_o, act_m, has_cur, resume, has_ctx, reload, sv,
+                 lolo, was_b, fresh_b, do_adv, growing, filling, arm,
+                 dem, exec_r2, rb_1, acc_1, new_res, ctx_acc_n,
+                 resident, spadsave, t_fin, t_ovr, nxtc, now, ddl_new,
+                 nrel_new, tr_new, fl_release, fl_done, fl_fireo,
+                 fl_cur, fl_nxt, mode2, run3, locked5, res_lo5, act2,
+                 hic2, fire, free1, rs2, lms2, tcs3, mi_inc, mf_inc))
+
         # per-task state (precedence follows the sequential order the
         # chains replace; distinct-column conflicts were ruled out in
-        # the dispatch analysis above)
-        c["status"] = _chain(c["status"], (ohR, accept, _READY),
-                             (ohTid, done_m, _PEND),
-                             (ohC, has_cur, _INT), (ohN, act_m, _RUN))
+        # the dispatch analysis above, and the one same-column overlap
+        # — overrun + displacement — is folded into fl_cur)
+        flags_new = _chain(flags, (ohR, accept, fl_release),
+                           (ohTid, done_m, fl_done),
+                           (ohTid, fire_o, fl_fireo),
+                           (ohC, has_cur, fl_cur),
+                           (ohN, act_m | fresh_b, fl_nxt))
+        c["flags"] = flags_new
         c["exec_cy"] = _chain(c["exec_cy"], (ohR, accept, 0.0),
                               (ohRun, do_adv | has_cur, exec_r2))
         c["demand"] = _chain(c["demand"], (ohTid, done_m, jnp.inf),
@@ -671,31 +853,23 @@ def _build_run(use_banks: bool, drop_lo: bool, preempt: str,
         c["job_deadline"] = _chain(
             c["job_deadline"], (ohR, fresh_miss, jnp.inf),
             (ohR, accept, ddl_new))
-        c["next_release"] = _chain(
-            c["next_release"], (ohR, is_rel, nrel_new))
+        nrel_a = _chain(c["next_release"], (ohR, is_rel, nrel_new))
+        c["next_release"] = nrel_a
         c["tick_release"] = _chain(c["tick_release"],
                                    (ohT, is_tickR, jnp.inf),
                                    (ohR, accept, tr_new))
-        c["pc"] = _chain(c["pc"], (ohR, accept, 0), (ohN, act_m, 1))
-        c["budget_overrun"] = _chain(c["budget_overrun"],
-                                     (ohR, accept, False),
-                                     (ohTid, fire_o, True))
-        c["released_in_hi"] = _chain(c["released_in_hi"],
-                                     (ohR, accept, rel_hi))
         c["blocked_since"] = _chain(c["blocked_since"],
                                     (ohN, fresh_b, now),
                                     (ohN, was_b, jnp.nan))
-        c["cause"] = _chain(c["cause"], (ohN, fresh_b, cause_v),
-                            (ohN, was_b, _C_NONE))
         if use_banks:
-            c["r_bytes"] = _chain(
-                c["r_bytes"],
+            c["res_bytes"] = _chain(
+                c["res_bytes"],
                 (ohRun, growing | done_m | sv | lolo,
                  jnp.where(done_m | sv | lolo, 0, rb_1)),
                 (ohN, reload, new_res))
         else:
-            c["spad"] = _chain(
-                c["spad"],
+            c["res_bytes"] = _chain(
+                c["res_bytes"],
                 (ohRun, growing | done_m | sv,
                  jnp.where(done_m | sv, 0, rb_1)),
                 (ohN, reload, new_res))
@@ -704,19 +878,68 @@ def _build_run(use_banks: bool, drop_lo: bool, preempt: str,
             (ohRun, filling | done_m | has_cur,
              jnp.where(done_m | has_cur, 0, acc_1)),
             (ohN, resume & has_ctx, ctx_acc_n))
-        c["data_in_accel"] = _chain(
-            c["data_in_accel"], (ohTid, done_m, False),
-            (ohC, has_cur, kept & ~lolo),
-            (ohN, resume & has_ctx, True))
-        c["ctx_valid"] = _chain(c["ctx_valid"], (ohTid, done_m, False),
-                                (ohC, has_cur, True))
         c["ctx_acc"] = _chain(c["ctx_acc"], (ohC, has_cur, acc_1))
         c["ctx_spad"] = _chain(
             c["ctx_spad"],
             (ohC, has_cur, jnp.where(spadsave, resident, 0)))
-        c["ctx_kept"] = _chain(c["ctx_kept"], (ohC, has_cur, kept))
-        c["mi"] = _apply_inc(c["mi"], mi_inc)
-        c["mf"] = _apply_inc(c["mf"], mf_inc)
+
+        # ---- pending-interrupt table: pop + prune + push -------------
+        # stale-interrupt pruning (proof in the module docstring): an
+        # entry whose task ends this step with no live job and whose
+        # fire time precedes that task's next release can never pass
+        # the firing guard again — drop it and free the slot now
+        popped = ohI & is_int[:, None]
+        if prune:
+            tid_k = jnp.maximum(c["ev_pay"] >> 2, 0)
+            st_k = jnp.take_along_axis(flags_new & _FL_ST_M, tid_k,
+                                       axis=1)
+            nrel_k = jnp.take_along_axis(nrel_a, tid_k, axis=1)
+            dead = jnp.isfinite(c["ev_time"]) & (st_k == _PEND) \
+                & (c["ev_time"] < nrel_k)
+            clear = popped | dead
+        else:
+            clear = popped
+        # this step's freed slots (pop + pruned) are immediately
+        # reusable by the pushes, like the event engine's heap
+        isfree = jnp.isinf(c["ev_time"]) | clear
+        n_free = isfree.sum(axis=1)
+        oh1 = _oh(jnp.argmax(isfree, axis=1), K)
+        oh2 = _oh(jnp.argmax(isfree & ~oh1, axis=1), K)
+        do1 = act_m & (n_free >= 1)
+        do2 = arm & (n_free >= 2)
+        ovf1 = ovf0 | (act_m & (n_free < 1)) | (arm & (n_free < 2))
+        ev_t = jnp.where(clear, jnp.inf, c["ev_time"])
+        c["ev_time"] = _chain(ev_t, (oh1, do1, t_fin),
+                              (oh2, do2, t_ovr))
+        c["ev_pay"] = _chain(c["ev_pay"], (oh1, do1, nxtc * 4 + 1),
+                             (oh2, do2, nxtc * 4 + 2))
+
+        # ---- packed per-point blocks: one fused write each -----------
+        # column-onehot where-chain + add-chain over the whole block:
+        # everything fuses into ONE kernel per block (a stack +
+        # concatenate assembly of the same values measures ~2.7x
+        # slower per step — XLA:CPU materializes concat operands as
+        # separate thunks inside the loop)
+        cols_i = jnp.arange(_PI_W)
+        new_pi = pi
+        for col, val in ((_I_MODE, mode2), (_I_RUN, run3),
+                         (_I_LOCKED, locked5), (_I_RESLO, res_lo5),
+                         (_I_ACT, act2), (_I_HI, hic2),
+                         (_I_ALIVE, fire), (_I_OVF, ovf1)):
+            new_pi = jnp.where((cols_i == col)[None, :],
+                               jnp.asarray(val, jnp.int32)[:, None],
+                               new_pi)
+        c["pi"] = _apply_inc(new_pi,
+                             [(_I_MI + i, m, v) for i, m, v in mi_inc])
+        cols_f = jnp.arange(_PF_W)
+        new_pf = pf
+        for col, val in ((_F_NOW, now), (_F_FREE, free1),
+                         (_F_RSTART, rs2), (_F_LMS, lms2),
+                         (_F_TICKCS, tcs3)):
+            new_pf = jnp.where((cols_f == col)[None, :],
+                               val[:, None], new_pf)
+        c["pf"] = _apply_inc(new_pf,
+                             [(_F_MF + i, m, v) for i, m, v in mf_inc])
         c["steps"] = c["steps"] + 1
         return c
 
@@ -725,7 +948,8 @@ def _build_run(use_banks: bool, drop_lo: bool, preempt: str,
             # overflowing points keep stepping (their results are
             # discarded and selectively re-run at a wider table); the
             # healthy majority of the batch must run to completion
-            return c["alive"].any() & (c["steps"] < sc["max_steps"])
+            return (c["pi"][:, _I_ALIVE] != 0).any() \
+                & (c["steps"] < sc["max_steps"])
 
         return jax.lax.while_loop(cond, functools.partial(_step, tb, sc),
                                   carry)
@@ -735,12 +959,12 @@ def _build_run(use_banks: bool, drop_lo: bool, preempt: str,
 
 @functools.lru_cache(maxsize=None)
 def _compiled_run(use_banks: bool, drop_lo: bool, preempt: str,
-                  nominal: bool):
+                  nominal: bool, prune: bool):
     """One jitted runner per static policy/profile class — the memo is
     what makes 'one compilation per shape/config' true: jax.jit caches
     specializations per *function object*, so handing back a fresh
     closure per call would retrace and recompile every chunk."""
-    return _build_run(use_banks, drop_lo, preempt, nominal)
+    return _build_run(use_banks, drop_lo, preempt, nominal, prune)
 
 
 # ----------------------------------------------------------------------
@@ -790,52 +1014,32 @@ def _tables(b: _VecBatch, seeds: Sequence[int]) -> Dict[str, "jnp.ndarray"]:
 def _carry0(b: _VecBatch, seeds: Sequence[int],
             K: int) -> Dict[str, "jnp.ndarray"]:
     """Initial carry: the freshly-initialized NumPy batch state (which
-    already drew the release phases from each point's host RNG) plus
-    empty metric/interrupt tables of width ``K``."""
+    already drew the release phases from each point's host RNG) as the
+    grouped tensors of the module docstring, plus empty packed metric
+    blocks and an interrupt table of width ``K``."""
     P, T = b.P, b.T
-    f = lambda a: jnp.asarray(a)
-    zP = jnp.zeros(P)
-    zPi = jnp.zeros(P, jnp.int32)
+    pi0 = np.zeros((P, _PI_W), np.int32)
+    pi0[:, _I_RUN] = -1
+    pi0[:, _I_ALIVE] = 1
+    pf0 = np.zeros((P, _PF_W))
+    pf0[:, _F_TICKCS] = np.inf
     return {
-        "status": jnp.zeros((P, T), jnp.int8),
+        "flags": jnp.zeros((P, T), jnp.int32),
         "exec_cy": jnp.zeros((P, T)),
         "demand": jnp.full((P, T), jnp.inf),
         "job_deadline": jnp.zeros((P, T)),
-        "budget_overrun": jnp.zeros((P, T), bool),
-        "data_in_accel": jnp.zeros((P, T), bool),
-        "pc": jnp.zeros((P, T), jnp.int8),
         "blocked_since": jnp.full((P, T), jnp.nan),
-        "cause": jnp.zeros((P, T), jnp.int8),
-        "released_in_hi": jnp.zeros((P, T), bool),
-        "r_bytes": jnp.zeros((P, T), jnp.int32),
-        "spad": jnp.zeros((P, T), jnp.int32),
+        "next_release": jnp.asarray(b.next_release),
+        "tick_release": jnp.full((P, T), jnp.inf),
+        "res_bytes": jnp.zeros((P, T), jnp.int32),
         "acc_bytes": jnp.zeros((P, T), jnp.int32),
-        "ctx_valid": jnp.zeros((P, T), bool),
         "ctx_acc": jnp.zeros((P, T), jnp.int32),
         "ctx_spad": jnp.zeros((P, T), jnp.int32),
-        "ctx_kept": jnp.zeros((P, T), bool),
-        "next_release": f(b.next_release),
-        "tick_release": jnp.full((P, T), jnp.inf),
-        "rel_cnt": jnp.zeros((P, T), jnp.int32),
         "ev_time": jnp.full((P, K), jnp.inf),
-        "ev_tid": jnp.full((P, K), -1, jnp.int32),
-        "ev_kind": jnp.zeros((P, K), jnp.int8),
-        "locked": zPi,
-        "res_lo": zPi,
-        "act_cnt": zPi,
-        "hi_cnt": zPi,
-        "now": zP,
-        "mode": jnp.zeros(P, jnp.int32),
-        "running": jnp.full(P, -1, jnp.int32),
-        "accel_free_at": zP,
-        "run_started": zP,
-        "last_mode_stamp": zP,
-        "tick_cs": jnp.full(P, jnp.inf),
-        "alive": jnp.ones(P, bool),
-        "overflow": jnp.zeros(P, bool),
+        "ev_pay": jnp.full((P, K), -1, jnp.int32),
+        "pi": jnp.asarray(pi0),
+        "pf": jnp.asarray(pf0),
         "steps": jnp.zeros((), jnp.int64),
-        "mi": jnp.zeros((P, _MI_W), jnp.int32),
-        "mf": jnp.zeros((P, _MF_W)),
     }
 
 
@@ -856,7 +1060,7 @@ _WARM: set = set()
 def _warm_key(policy: Policy, nominal: bool, P: int, T: int,
               K: int) -> tuple:
     return (policy.use_banks, policy.drop_lo_in_hi, policy.preemption,
-            nominal, P, T, K)
+            nominal, _PRUNE_STALE, P, T, K)
 
 
 def _run_once(b: _VecBatch, policy: Policy, seeds: Sequence[int],
@@ -865,7 +1069,7 @@ def _run_once(b: _VecBatch, policy: Policy, seeds: Sequence[int],
     """One compiled run of a prepared batch at interrupt-table width
     ``K``; returns the final carry as NumPy arrays."""
     run = _compiled_run(policy.use_banks, policy.drop_lo_in_hi,
-                        policy.preemption, nominal)
+                        policy.preemption, nominal, _PRUNE_STALE)
     from jax.experimental import enable_x64
     max_steps = _max_steps(b, duration)
     # event times are float64; everything (array upload included) must
@@ -879,7 +1083,10 @@ def _run_once(b: _VecBatch, policy: Policy, seeds: Sequence[int],
               "max_steps": jnp.int64(max_steps)}
         final = run(tb, sc, _carry0(b, seeds, K))
         final = {k: np.asarray(v) for k, v in final.items()}
-    if final["steps"] >= max_steps and final["alive"].any():
+    # unpack the layout-dependent bits here so _run_chunk (and its
+    # tests) stay independent of the packed-block column order
+    final["overflow"] = final["pi"][:, _I_OVF] != 0
+    if final["steps"] >= max_steps and final["pi"][:, _I_ALIVE].any():
         raise RuntimeError(
             f"jit engine: lockstep loop hit the {max_steps}-step "
             "safety bound with live points remaining")
@@ -888,26 +1095,34 @@ def _run_once(b: _VecBatch, policy: Policy, seeds: Sequence[int],
 
 
 def _run_chunk(tasksets, programs, policy, seeds, duration, overrun_prob,
-               cf, demand_profile: str) -> List[RunMetrics]:
+               cf, demand_profile: str,
+               point_ids: Optional[Sequence[int]] = None
+               ) -> List[RunMetrics]:
     """Simulate one chunk with the per-point overflow-retry ladder.
 
-    The chunk first runs at the narrow ``_K0`` interrupt table (ample
-    for typical points).  Points whose table overflowed — a per-point,
-    batch-composition-independent event — are re-run in small padded
-    sub-batches at doubled widths until they fit; the counter-based
-    RNG makes every retry bit-deterministic, so a point's result never
-    depends on which batch or table width executed it."""
+    The chunk first runs at the narrow primary interrupt table (ample
+    for typical points, rarer still with stale-interrupt pruning).
+    Points whose table overflowed — a per-point, batch-composition-
+    independent event — are re-run in small padded sub-batches at
+    doubled widths until they fit; the counter-based RNG makes every
+    retry bit-deterministic, so a point's result never depends on
+    which batch or table width executed it.  A point that still
+    overflows at the maximum width raises a loud, point-identified
+    error: metrics computed from a saturated table would silently drop
+    interrupts.
+    """
     nominal = demand_profile == "nominal"
     out: List[Optional[RunMetrics]] = [None] * len(tasksets)
     idx = list(range(len(tasksets)))
-    K = _K0
+    K = _table_width()
+    k_max = _table_max(K)
     while idx:
         ts = [tasksets[i] for i in idx]
         sd = [int(seeds[i]) for i in idx]
         # pad retry sub-batches up to the bucket size so the ladder
         # reuses one compilation per (bucket, K) instead of one per
         # subset shape (padded copies are simulated and discarded)
-        if K > _K0 and len(ts) < _RETRY_BUCKET:
+        if K > _table_width() and len(ts) < _RETRY_BUCKET:
             pad = _RETRY_BUCKET - len(ts)
             ts = ts + [ts[-1]] * pad
             sd = sd + [sd[-1]] * pad
@@ -916,33 +1131,45 @@ def _run_chunk(tasksets, programs, policy, seeds, duration, overrun_prob,
         final = _run_once(b, policy, sd, duration, overrun_prob, cf,
                           nominal, K)
         metrics = _assemble(b, final, duration)
+        overflow = final["overflow"]
         redo = []
         for pos, i in enumerate(idx):
-            if final["overflow"][pos]:
+            if overflow[pos]:
                 redo.append(i)
             else:
                 out[i] = metrics[pos]
         idx = redo
         K *= 2
-        if idx and K > _K_MAX:
+        if idx and K > k_max:
+            pts = ", ".join(
+                f"(taskset {point_ids[i] if point_ids is not None else i}"
+                f", seed {int(seeds[i])})" for i in idx)
             raise RuntimeError(
-                "jit engine: pending-interrupt table exceeded "
-                f"{_K_MAX} slots — simulation state diverged")
+                f"jit engine: pending-interrupt table for {len(idx)} "
+                f"point(s) still overflowed at the maximum width "
+                f"{k_max} — refusing to return metrics from a "
+                f"saturated table.  Affected (taskset index, seed): "
+                f"[{pts}].  Raise REPRO_JIT_TABLE_MAX (or unset "
+                f"REPRO_JIT_TABLE_WIDTH) to widen the retry ladder.")
     return out  # type: ignore[return-value]
 
 
 def _assemble(b: _VecBatch, s: Dict[str, np.ndarray],
               duration: float) -> List[RunMetrics]:
     """Tail accounting (the event engine's post-loop pass) + RunMetrics
-    assembly from the final carry."""
+    assembly from the final grouped carry."""
     P = b.P
     out: List[RunMetrics] = []
-    live = (s["status"] != _PEND) & b.valid \
+    status = s["flags"] & _FL_ST_M
+    live = (status != _PEND) & b.valid \
         & (duration > s["job_deadline"])
-    mi, mf = s["mi"], s["mf"]
+    mi = s["pi"][:, _I_MI:]
+    mf = s["pf"][:, _F_MF:]
+    mode = s["pi"][:, _I_MODE]
+    lms = s["pf"][:, _F_LMS]
     for p in range(P):
         mode_cycles = mf[p, _MF_MC:_MF_MC + 3].copy()
-        mode_cycles[s["mode"][p]] += duration - s["last_mode_stamp"][p]
+        mode_cycles[mode[p]] += duration - lms[p]
         misses = mi[p, _MI_MISS:_MI_MISS + 2].astype(np.int64).copy()
         for t in live[p].nonzero()[0]:
             misses[int(b.is_hi[p, t])] += 1
@@ -979,11 +1206,61 @@ def default_streams() -> int:
     The compiled engine releases the GIL for the whole while_loop, so
     independent chunks genuinely overlap on separate cores — an engine
     property the Python-loop backends cannot share (their lockstep is
-    host-call bound).  Override with ``REPRO_JIT_STREAMS``."""
-    env = os.environ.get("REPRO_JIT_STREAMS")
-    if env:
-        return max(int(env), 1)
-    return max(min(2, os.cpu_count() or 1), 1)
+    host-call bound).  Override with ``REPRO_JIT_STREAMS`` (a positive
+    integer; junk values raise ``ValueError`` instead of silently
+    misconfiguring the pool)."""
+    return _env_int("REPRO_JIT_STREAMS",
+                    max(min(2, os.cpu_count() or 1), 1))
+
+
+def lockstep_kernel_count(tasksets: Sequence[List[TaskParams]],
+                          programs: Dict[str, Program], policy: Policy,
+                          *, seeds: Sequence[int], duration: float = 2e7,
+                          overrun_prob: float = 0.3, cf: float = 2.0,
+                          demand_profile: str = "sampled",
+                          table_width: Optional[int] = None) -> int:
+    """Number of XLA kernels (fusion instructions) in the compiled
+    lockstep computation for this batch shape/config.
+
+    Counts every instruction of the optimized while-loop *body*
+    computation except free ones (tuple plumbing, constants) — i.e.
+    the number of thunks XLA:CPU dispatches per lockstep step.  The
+    grouped-carry refactor's whole point is cutting this number —
+    XLA:CPU pays a per-kernel dispatch cost inside ``while_loop``
+    bodies — so ``benchmarks/perf_sim.py`` logs it next to the timing
+    samples in ``BENCH_sim.json`` (field ``xla_kernels``) where the
+    trajectory is tracked across PRs."""
+    require_jax()
+    nominal = demand_profile == "nominal"
+    K = _table_width() if table_width is None else table_width
+    b = _VecBatch(tasksets, programs, policy,
+                  seeds=[int(s) for s in seeds], duration=duration,
+                  overrun_prob=overrun_prob, cf=cf)
+    run = _compiled_run(policy.use_banks, policy.drop_lo_in_hi,
+                        policy.preemption, nominal, _PRUNE_STALE)
+    from jax.experimental import enable_x64
+    max_steps = _max_steps(b, duration)
+    with enable_x64():
+        tb = _tables(b, seeds)
+        sc = {"t_sr": jnp.float64(policy.t_sr),
+              "overrun_prob": jnp.float64(overrun_prob),
+              "cf": jnp.float64(cf),
+              "duration": jnp.float64(duration),
+              "max_steps": jnp.int64(max_steps)}
+        txt = run.lower(tb, sc, _carry0(b, seeds, K)).compile().as_text()
+    # the while body is the largest non-fused computation in the
+    # optimized module (the step dominates cond/entry by far)
+    best: List[str] = []
+    for m in re.finditer(r"(?m)^(\S[^{\n]*) \{$(.*?)^\}", txt, re.S):
+        name, body = m.group(1).strip(), m.group(2)
+        if "fused_computation" in name:
+            continue
+        ops = re.findall(r"(?m)=\s+\S+\s+([\w-]+)\(", body)
+        if len(ops) > len(best):
+            best = ops
+    free = ("get-tuple-element", "constant", "tuple", "parameter",
+            "bitcast")
+    return sum(1 for op in best if op not in free)
 
 
 def simulate_jbatch(tasksets: Sequence[List[TaskParams]],
@@ -1006,6 +1283,7 @@ def simulate_jbatch(tasksets: Sequence[List[TaskParams]],
     if n != len(seeds):
         raise ValueError(f"{n} tasksets vs {len(seeds)} seeds")
     streams = default_streams() if streams is None else max(streams, 1)
+    k0 = _table_width()
     # small chunks keep the lockstep state cache-resident and give the
     # thread pool work to overlap (64 measured fastest on the BENCH
     # corpus — see docs/performance.md); the ragged tail span is
@@ -1024,14 +1302,15 @@ def simulate_jbatch(tasksets: Sequence[List[TaskParams]],
         idxs, real = span
         part = _run_chunk([tasksets[i] for i in idxs], programs, policy,
                           [int(seeds[i]) for i in idxs], duration,
-                          overrun_prob, cf, demand_profile)
+                          overrun_prob, cf, demand_profile,
+                          point_ids=idxs)
         return part[:real]
 
     def span_warm(span):
         idxs, _ = span
         T = max(len(tasksets[i]) for i in idxs)
         return _warm_key(policy, demand_profile == "nominal",
-                         len(idxs), T, _K0) in _WARM
+                         len(idxs), T, k0) in _WARM
 
     if streams == 1 or len(spans) == 1:
         parts = [go(sp) for sp in spans]
@@ -1040,7 +1319,7 @@ def simulate_jbatch(tasksets: Sequence[List[TaskParams]],
         with ThreadPoolExecutor(max_workers=streams) as ex:
             parts = list(ex.map(go, spans))
     else:
-        # run the first span serially so the (chunk, _K0) compilation
+        # run the first span serially so the (chunk, K0) compilation
         # is warm before the pool fans out over the rest
         parts = [go(spans[0])]
         with ThreadPoolExecutor(max_workers=streams) as ex:

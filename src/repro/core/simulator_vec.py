@@ -78,7 +78,12 @@ VEC_SIM_SEMANTICS_VERSION = 1
 # module alters any simulated result.  Defined here — not in
 # simulator_jit — so the experiments/spec layer can hash points
 # without importing JAX (~1.5s per worker process).
-JIT_SIM_SEMANTICS_VERSION = 1
+# v2 = grouped-carry engine + stale-interrupt pruning (results are
+# provably unchanged — the pruned entries are no-op pops — but the
+# engine internals were rebuilt wholesale, so the cache namespace
+# rolls over defensively rather than trusting the proof with stale
+# campaign rows).
+JIT_SIM_SEMANTICS_VERSION = 2
 
 # status codes (mirror task.Status)
 _PEND, _READY, _RUN, _INT = 0, 1, 2, 3

@@ -10,10 +10,29 @@ serial scripts computed.
 """
 from __future__ import annotations
 
+import math
 from collections import defaultdict
 from typing import Any, Dict, Iterable, List, Tuple
 
 from repro.core.simulator import AggSamples, RunMetrics
+
+# the sample families metrics_row flattens (also the upgrade list for
+# rows cached before the {name}_mean columns existed)
+SAMPLE_FAMILIES = ("pi", "ci", "save", "restore")
+
+
+def ensure_row_means(row: Dict[str, Any]) -> Dict[str, Any]:
+    """Backfill the ``{name}_mean`` columns on a row cached before
+    they existed (event/vec cache namespaces were deliberately NOT
+    invalidated for a derivable column — the mean is a pure function
+    of the stored sum/count).  Fresh rows and non-sim rows (no
+    ``{name}_n`` keys) pass through untouched."""
+    for name in SAMPLE_FAMILIES:
+        n_key, mean_key = f"{name}_n", f"{name}_mean"
+        if n_key in row and mean_key not in row:
+            n = row[n_key]
+            row[mean_key] = row[f"{name}_sum"] / n if n else None
+    return row
 
 
 def metrics_row(m: RunMetrics, **point_fields: Any) -> Dict[str, Any]:
@@ -23,17 +42,26 @@ def metrics_row(m: RunMetrics, **point_fields: Any) -> Dict[str, Any]:
     are self-describing and groupable without the originating spec.
     Per-event lists may arrive pre-aggregated as
     :class:`~repro.core.simulator.AggSamples` (the jit backend carries
-    sums/counts on-device instead of sample lists).
+    sums/counts on-device instead of sample lists).  Each sample
+    family also yields a per-run ``{name}_mean``; a zero-count
+    aggregate means ``None`` (NaN's JSON-/equality-safe spelling —
+    see the inline note) rather than raising ``ZeroDivisionError``.
     """
     row: Dict[str, Any] = dict(point_fields)
     for name, xs in (("pi", m.pi_blocking), ("ci", m.ci_blocking),
                      ("save", m.save_cycles), ("restore", m.restore_cycles)):
-        if isinstance(xs, AggSamples):
-            row[f"{name}_sum"] = xs.total
-            row[f"{name}_n"] = xs.n
-        else:
-            row[f"{name}_sum"] = float(sum(xs))
-            row[f"{name}_n"] = len(xs)
+        if not isinstance(xs, AggSamples):
+            xs = AggSamples(float(sum(xs)), len(xs))
+        row[f"{name}_sum"] = xs.total
+        row[f"{name}_n"] = xs.n
+        # per-run mean via the one canonical definition
+        # (AggSamples.mean: NaN when empty — zero blocking/save events
+        # is normal), with NaN encoded as None in the row: the JSON-
+        # safe spelling that also keeps row equality usable — NaN !=
+        # NaN would break the cross-engine row-comparison gates and
+        # the cache round-trip, None == None does not
+        mean = xs.mean
+        row[f"{name}_mean"] = None if math.isnan(mean) else mean
     row.update(
         jobs_lo=m.jobs["LO"], jobs_hi=m.jobs["HI"],
         done_lo=m.done["LO"], done_hi=m.done["HI"],
@@ -64,11 +92,13 @@ def group_rows(rows: Iterable[Dict[str, Any]],
 
 def pooled_mean(rows: Iterable[Dict[str, Any]], name: str) -> float:
     """Mean of the concatenated per-event list ``name`` across rows
-    (rows carry ``{name}_sum`` / ``{name}_n``)."""
+    (rows carry ``{name}_sum`` / ``{name}_n``).  A cell with zero
+    events pools to NaN — "no samples" must read as *no data*, not as
+    a blocking time of 0.0 — and never raises ``ZeroDivisionError``."""
     rows = list(rows)
     n = sum(r[f"{name}_n"] for r in rows)
     if n == 0:
-        return 0.0
+        return float("nan")
     return sum(r[f"{name}_sum"] for r in rows) / n
 
 

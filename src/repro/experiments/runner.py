@@ -46,7 +46,7 @@ from repro.core.simulator import simulate
 from repro.core.simulator_vec import simulate_vbatch
 from repro.core.taskgen import generate_taskset
 from repro.experiments.cache import ResultCache
-from repro.experiments.metrics import metrics_row
+from repro.experiments.metrics import ensure_row_means, metrics_row
 from repro.experiments.spec import (FuncPoint, FuncSweep, SimPoint, Sweep,
                                     point_from_dict, policy_from_dict)
 
@@ -200,7 +200,10 @@ class Campaign:
         for i, k in enumerate(keys):
             cached = self.cache.get(k) if self.use_cache else None
             if cached is not None:
-                rows[i] = cached
+                # rows cached before the {name}_mean columns existed
+                # are upgraded in place (the mean is derivable from
+                # the stored sum/count — no cache invalidation needed)
+                rows[i] = ensure_row_means(cached)
             else:
                 todo.append(i)
         self.stats = {"hits": len(points) - len(todo), "misses": len(todo)}

@@ -4,6 +4,7 @@ Tiny sweeps (short duration, few sets) keep each test fast while still
 exercising the full plan -> fan-out -> cache -> collect path.
 """
 import dataclasses
+import math
 
 import pytest
 
@@ -145,10 +146,36 @@ class TestSeeding:
 
 
 class TestAggregation:
+    def test_pre_mean_cached_rows_upgraded_on_read(self, tmp_path):
+        """Rows cached before the {name}_mean columns existed must be
+        backfilled on cache read — mixing schemas in one collect()
+        would KeyError consumers of the new columns."""
+        from repro.experiments.metrics import ensure_row_means
+        from repro.experiments.runner import Campaign
+        sweep = Sweep(name="t", policies=(Policy.mesc(),), n_sets=2,
+                      duration=1e6)
+        c1 = Campaign(sweep, cache_dir=tmp_path, workers=1)
+        fresh = c1.collect()
+        assert all("pi_mean" in r for r in fresh)
+        # simulate a pre-upgrade cache: strip the mean columns in situ
+        for key in [p.key() for p in sweep.points()]:
+            row = c1.cache.get(key)
+            for name in ("pi", "ci", "save", "restore"):
+                row.pop(f"{name}_mean", None)
+            c1.cache.put(key, row)
+        replay = Campaign(sweep, cache_dir=tmp_path,
+                          workers=1).collect()
+        assert replay == fresh
+        # non-sim rows (no sum/count keys) pass through untouched
+        assert ensure_row_means({"x": 1}) == {"x": 1}
+        assert ensure_row_means({"pi_sum": 0.0, "pi_n": 0})[
+            "pi_mean"] is None
+
     def test_pooled_mean_matches_concatenated_lists(self):
         rows = [{"pi_sum": 10.0, "pi_n": 2}, {"pi_sum": 5.0, "pi_n": 3}]
         assert pooled_mean(rows, "pi") == pytest.approx(15.0 / 5)
-        assert pooled_mean([{"pi_sum": 0.0, "pi_n": 0}], "pi") == 0.0
+        # zero events pools to NaN ("no data"), never ZeroDivisionError
+        assert math.isnan(pooled_mean([{"pi_sum": 0.0, "pi_n": 0}], "pi"))
 
     def test_group_and_frac(self):
         rows = [{"u": 0.5, "success_all": 1}, {"u": 0.5, "success_all": 0},

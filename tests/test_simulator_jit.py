@@ -16,10 +16,13 @@ adding cases.
 """
 import dataclasses
 import importlib
+import math
+import os
 import sys
 
 import numpy as np
 import pytest
+from hypothesis import given, settings, strategies as st
 
 from repro.core import Policy, generate_taskset, simulate
 from repro.core import simulator_jit as sj
@@ -135,6 +138,26 @@ class TestAggSamples:
         assert row["pi_sum"] == 12.5 and row["pi_n"] == 3
         assert row["ci_sum"] == 0.0 and row["ci_n"] == 0
 
+    def test_empty_aggregate_mean_is_nan_not_crash(self):
+        """A run with zero blocking/save events is normal: the mean
+        must come back NaN (AggSamples.mean) / None (the row's JSON-
+        safe spelling), never ZeroDivisionError."""
+        import json
+        from repro.core.simulator import RunMetrics
+        assert math.isnan(AggSamples(0.0, 0).mean)
+        assert AggSamples(9.0, 3).mean == 3.0
+        m = RunMetrics(pi_blocking=AggSamples(12.0, 4),
+                       ci_blocking=AggSamples(0.0, 0),
+                       save_cycles=[], restore_cycles=[])
+        row = metrics_row(m)                  # must not raise
+        assert row["pi_mean"] == 3.0
+        assert row["ci_mean"] is None         # empty aggregate
+        assert row["restore_mean"] is None    # empty list form
+        # the tidy-row collector's storage format round-trips it
+        assert json.loads(json.dumps(row)) == row
+        # and row equality (the cross-engine gates) still works
+        assert row == metrics_row(m)
+
     def test_jit_returns_aggregates(self):
         m = simulate_vbatch(FIG8_TS[:1], LIB, Policy.mesc(),
                             seeds=FIG8_SEEDS[:1], duration=2e6,
@@ -175,15 +198,173 @@ class TestOverflowRetryLadder:
         assert retry_seeds == [1, 3, 3, 3]
 
     def test_ladder_gives_up_past_kmax(self, monkeypatch):
+        """Exhaustion is a loud, point-identified error — never metrics
+        from a saturated table."""
         monkeypatch.setattr(
             sj, "_run_once",
             lambda b, policy, seeds, duration, op, cf, nominal, K:
             {"overflow": np.ones(b.P, bool), "seeds": list(seeds)})
         monkeypatch.setattr(
             sj, "_assemble", lambda b, final, duration: [None] * b.P)
-        with pytest.raises(RuntimeError, match="exceeded"):
-            sj._run_chunk(MIXED_TS[:1], LIB, Policy.mesc(), [0],
-                          1e6, 0.3, 2.0, "sampled")
+        with pytest.raises(RuntimeError) as ei:
+            sj._run_chunk(MIXED_TS[:2], LIB, Policy.mesc(), [7, 9],
+                          1e6, 0.3, 2.0, "sampled", point_ids=[40, 41])
+        msg = str(ei.value)
+        assert "overflowed at the maximum width" in msg
+        # both points named with their global taskset index + seed
+        assert "(taskset 40, seed 7)" in msg
+        assert "(taskset 41, seed 9)" in msg
+        assert "REPRO_JIT_TABLE_MAX" in msg
+
+    def test_real_exhaustion_with_tiny_starting_width(self, monkeypatch):
+        """Regression for the saturated-table bug: a real run whose
+        table can never fit (width ladder capped at 1) must raise the
+        point-identified error instead of returning metrics."""
+        monkeypatch.setenv("REPRO_JIT_TABLE_WIDTH", "1")
+        monkeypatch.setenv("REPRO_JIT_TABLE_MAX", "1")
+        with pytest.raises(RuntimeError) as ei:
+            simulate_vbatch(FIG8_TS[:1], LIB, Policy.mesc(),
+                            seeds=FIG8_SEEDS[:1], duration=2e6,
+                            demand_profile="nominal",
+                            select_backend="jit")
+        msg = str(ei.value)
+        assert "overflowed at the maximum width 1" in msg
+        assert f"seed {FIG8_SEEDS[0]}" in msg
+
+
+class TestEnvKnobs:
+    """REPRO_JIT_* env overrides reject junk loudly (a bad value must
+    not crash with a bare int() traceback or silently misconfigure
+    the thread pool / retry ladder)."""
+
+    @pytest.mark.parametrize("bad", ["abc", "1.5", "0", "-2", "2x"])
+    def test_streams_rejects_junk(self, monkeypatch, bad):
+        monkeypatch.setenv("REPRO_JIT_STREAMS", bad)
+        with pytest.raises(ValueError, match="REPRO_JIT_STREAMS"):
+            sj.default_streams()
+
+    def test_streams_accepts_valid_and_default(self, monkeypatch):
+        monkeypatch.setenv("REPRO_JIT_STREAMS", "3")
+        assert sj.default_streams() == 3
+        monkeypatch.delenv("REPRO_JIT_STREAMS")
+        assert sj.default_streams() >= 1
+        monkeypatch.setenv("REPRO_JIT_STREAMS", "")   # empty = unset
+        assert sj.default_streams() >= 1
+
+    @pytest.mark.parametrize("var,fn", [
+        ("REPRO_JIT_TABLE_WIDTH", sj._table_width),
+        ("REPRO_JIT_TABLE_MAX", lambda: sj._table_max(1)),
+    ])
+    def test_table_knobs_reject_junk(self, monkeypatch, var, fn):
+        monkeypatch.setenv(var, "many")
+        with pytest.raises(ValueError, match=var):
+            fn()
+        monkeypatch.setenv(var, "0")
+        with pytest.raises(ValueError, match=var):
+            fn()
+
+
+class TestStaleInterruptPruning:
+    """The pruning pass (proof in core/simulator_jit.py's docstring)
+    must be invisible in results: pruned entries are exactly the
+    no-op pops, so the pruned jit engine stays bit-exact vs the
+    unpruned NumPy vec engine on nominal points — across policies and
+    forced-high table occupancies — and bit-identical to its own
+    unpruned graph."""
+
+    PRUNE_POLICIES = [Policy.mesc(),
+                      Policy(preemption="none", drop_lo_in_hi=True,
+                             name="amc-np")]
+    PROP_TS = [generate_taskset(0.9, seed=100 + s, n_tasks=6,
+                                programs=LIB) for s in range(4)]
+
+    @settings(max_examples=5, deadline=None)
+    @given(seed=st.integers(0, 2 ** 20), u=st.floats(0.6, 0.95),
+           pol=st.integers(0, 1), k0=st.integers(1, 2))
+    def test_pruned_jit_bit_exact_vs_unpruned_vec(self, seed, u, pol,
+                                                  k0):
+        """Property: random point content, random policy, and a tiny
+        starting table width (forcing high relative occupancy + the
+        retry ladder) — rows must equal the vec engine's exactly."""
+        policy = self.PRUNE_POLICIES[pol]
+        ts = list(self.PROP_TS)
+        ts[0] = generate_taskset(u, seed=seed, n_tasks=6, programs=LIB)
+        seeds = [seed, 1, 2, 3]
+        ref = simulate_vbatch(ts, LIB, policy, seeds=seeds,
+                              duration=3e5, demand_profile="nominal")
+        old_bucket = sj._RETRY_BUCKET
+        os.environ["REPRO_JIT_TABLE_WIDTH"] = str(2 ** k0)
+        sj._RETRY_BUCKET = 4
+        try:
+            out = simulate_vbatch(ts, LIB, policy, seeds=seeds,
+                                  duration=3e5,
+                                  demand_profile="nominal",
+                                  select_backend="jit")
+        finally:
+            sj._RETRY_BUCKET = old_bucket
+            del os.environ["REPRO_JIT_TABLE_WIDTH"]
+        assert rows(ref) == rows(out)
+
+    def test_prune_toggle_bit_identical(self):
+        """Pruning removes only dead pops: the unpruned compiled graph
+        produces bit-identical metrics (sampled profile, so demand
+        draws and the full event mix are exercised)."""
+        a = simulate_vbatch(FIG8_TS[:16], LIB, Policy.mesc(),
+                            seeds=FIG8_SEEDS[:16], duration=2e6,
+                            select_backend="jit")
+        assert sj._PRUNE_STALE is True
+        sj._PRUNE_STALE = False
+        try:
+            b = simulate_vbatch(FIG8_TS[:16], LIB, Policy.mesc(),
+                                seeds=FIG8_SEEDS[:16], duration=2e6,
+                                select_backend="jit")
+        finally:
+            sj._PRUNE_STALE = True
+        assert rows(a) == rows(b)
+
+    def test_kernel_count_reported(self):
+        """The grouped-carry step's per-step kernel count is queryable
+        (perf_sim logs it into BENCH_sim.json); the pre-refactor
+        engine compiled to ~143 body kernels at this shape — the
+        grouped carry must stay well under that."""
+        n = sj.lockstep_kernel_count(FIG8_TS[:8], LIB, Policy.mesc(),
+                                     seeds=FIG8_SEEDS[:8],
+                                     duration=2e6)
+        assert 0 < n < 140
+
+
+class TestPerfDeltaSchemaGuard:
+    """print_delta vs an old-schema baseline: warn + skip, no KeyError
+    (regression: v1 entries lack the v2 per-engine layout)."""
+
+    def test_v1_baseline_skipped_with_warning(self, capsys):
+        import json
+        from pathlib import Path
+        from benchmarks.perf_sim import print_delta
+        stub = json.loads(
+            (Path(__file__).parent / "data"
+             / "BENCH_sim_v1_stub.json").read_text())
+        new = {"engines": {e: {"points_per_sec": 100.0,
+                               "spread_pct": 1.0}
+                           for e in ("event", "vec", "jit")}}
+        print_delta("full", new, stub)          # must not raise
+        out = capsys.readouterr().out
+        assert "schema v1" in out and "skipping perf delta" in out
+        assert "perf_delta" not in out
+
+    def test_current_schema_still_diffs(self, capsys):
+        from benchmarks.perf_sim import SCHEMA_VERSION, print_delta
+        base = {"schema_version": SCHEMA_VERSION,
+                "sections": {"full": {"engines": {
+                    "event": {"points_per_sec": 50.0},
+                    "vec": {"points_per_sec": 100.0},
+                    "jit": {"points_per_sec": 200.0}}}}}
+        new = {"engines": {e: {"points_per_sec": 110.0,
+                               "spread_pct": 2.0}
+                           for e in ("event", "vec", "jit")}}
+        print_delta("full", new, base)
+        out = capsys.readouterr().out
+        assert out.count("perf_delta,full") == 3
 
 
 class TestBackendSelection:

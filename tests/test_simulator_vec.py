@@ -283,9 +283,11 @@ class TestBenchBaseline:
         assert eq["jit_statistical_ok"] is True
 
     def test_perf_harness_stats_and_delta(self, capsys):
-        """Harness internals: median-of-N stats and baseline deltas
-        (including a schema-v1 baseline missing the jit engine)."""
-        from benchmarks.perf_sim import _stats, print_delta
+        """Harness internals: median-of-N stats, same-schema deltas,
+        and the old-schema guard (a v1 baseline is skipped with a
+        warning rather than diffed against a different layout —
+        tests/test_simulator_jit.py pins the committed v1 stub)."""
+        from benchmarks.perf_sim import SCHEMA_VERSION, _stats, print_delta
         s = _stats([2.0, 1.0, 3.0], 10)
         assert s["seconds"] == 2.0            # median, not first sample
         assert s["points_per_sec"] == 5.0
@@ -293,10 +295,17 @@ class TestBenchBaseline:
         assert s["spread_pct"] == 100.0
         new = {"engines": {e: _stats([1.0, 1.0, 1.0], 10)
                            for e in ("event", "vec", "jit")}}
-        old_v1 = {"sections": {"smoke": {"engines": {
-            "event": {"points_per_sec": 20.0},
-            "vec": {"points_per_sec": 5.0}}}}}
-        print_delta("smoke", new, old_v1)
+        base = {"schema_version": SCHEMA_VERSION,
+                "sections": {"smoke": {"engines": {
+                    "event": {"points_per_sec": 20.0},
+                    "vec": {"points_per_sec": 5.0}}}}}
+        print_delta("smoke", new, base)
         out = capsys.readouterr().out
         assert "perf_delta,smoke,event,20.0,10.0,-50.0%" in out
         assert "# no baseline for engine 'jit'" in out
+        old_v1 = {"sections": {"smoke": {"engines": {
+            "event": {"points_per_sec": 20.0}}}}}
+        print_delta("smoke", new, old_v1)     # no schema_version = pre-v2
+        out = capsys.readouterr().out
+        assert "skipping perf delta" in out
+        assert "perf_delta" not in out
