@@ -20,22 +20,25 @@ U = 0.8
 OVERRUN = 0.5
 
 
-def sweeps(full: bool = False, engine: str = "event"):
+def sweeps(full: bool = False, engine: str = "event", devices=None):
     n_sets = 400 if full else max(DEFAULT_SETS // 2, 30)
     return (Sweep(name="fig10_gamma", policies=(Policy.mesc(),),
                   utils=(U,), gammas=GAMMAS, n_sets=n_sets,
-                  overrun_prob=OVERRUN, engine=engine),
+                  overrun_prob=OVERRUN, engine=engine,
+                  devices=devices),
             Sweep(name="fig10_beta", policies=(Policy.mesc(),),
                   utils=(U,), n_tasks=BETAS, n_sets=n_sets,
-                  overrun_prob=OVERRUN, engine=engine))
+                  overrun_prob=OVERRUN, engine=engine,
+                  devices=devices))
 
 
 def _surv(cell) -> float:
     return ratio_of_sums(cell, "lo_done_in_hi", "lo_released_in_hi")
 
 
-def main(full: bool = False, engine: str = "event", **campaign_kw):
-    gamma_sweep, beta_sweep = sweeps(full, engine)
+def main(full: bool = False, engine: str = "event", devices=None,
+         **campaign_kw):
+    gamma_sweep, beta_sweep = sweeps(full, engine, devices)
     n_sets = gamma_sweep.n_sets
     out = {}
     with Timer() as t:

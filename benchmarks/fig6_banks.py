@@ -54,9 +54,9 @@ def sweep(full: bool = False) -> FuncSweep:
                           [{"workload": n} for n in names])
 
 
-def main(full: bool = False, engine: str = "event",
+def main(full: bool = False, engine: str = "event", devices=None,
          **campaign_kw):
-    # engine: accepted for run.py uniformity; this figure has no
+    # engine/devices: accepted for run.py uniformity; this figure has no
     # single-accelerator DES sweep for the vec backend to run
     del engine
     with Timer() as t:

@@ -26,10 +26,11 @@ POLICIES = (Policy.mesc(),
             Policy.non_preemptive())
 
 
-def sweep(full: bool = False, engine: str = "event") -> Sweep:
+def sweep(full: bool = False, engine: str = "event",
+          devices=None) -> Sweep:
     n_sets = max((1000 if full else DEFAULT_SETS) // 5, 20)
     return Sweep(name="fig7_blocking", policies=POLICIES, utils=UTILS,
-                 n_sets=n_sets, engine=engine)
+                 n_sets=n_sets, engine=engine, devices=devices)
 
 
 def _pm(rows, name):
@@ -41,9 +42,11 @@ def _pm(rows, name):
     return 0.0 if math.isnan(v) else v
 
 
-def main(full: bool = False, engine: str = "event", **campaign_kw):
+def main(full: bool = False, engine: str = "event", devices=None,
+         **campaign_kw):
     with Timer() as t:
-        rows = Campaign(sweep(full, engine), **campaign_kw).collect()
+        rows = Campaign(sweep(full, engine, devices),
+                        **campaign_kw).collect()
     cells = group_rows(rows, "policy", "u")
     print("u,c_save,c_restore,c_save_noB,c_restore_noB,"
           "pi_mesc,ci_mesc,pi_noCS,ci_noCS,pi_speedup,ci_speedup")

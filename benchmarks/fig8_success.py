@@ -22,15 +22,18 @@ SYSTEMS = (("mesc", Policy.mesc()),
                                name="amc-np")))
 
 
-def sweep(full: bool = False, engine: str = "event") -> Sweep:
+def sweep(full: bool = False, engine: str = "event",
+          devices=None) -> Sweep:
     n_sets = 1000 if full else DEFAULT_SETS
     return Sweep(name="fig8_success",
                  policies=tuple(p for _, p in SYSTEMS),
-                 utils=UTILS, n_sets=n_sets, engine=engine)
+                 utils=UTILS, n_sets=n_sets, engine=engine,
+                 devices=devices)
 
 
-def main(full: bool = False, engine: str = "event", **campaign_kw):
-    sw = sweep(full, engine)
+def main(full: bool = False, engine: str = "event", devices=None,
+         **campaign_kw):
+    sw = sweep(full, engine, devices)
     with Timer() as t:
         rows = Campaign(sw, **campaign_kw).collect()
     n_sets = sw.n_sets

@@ -6,9 +6,12 @@ The corpus is MESC over the fig8 utilisation band (fig8's task-set
 recipe: 10-task UUnifast sets, CF=2, duration 2e8 cycles), 512
 ``(taskset, seed)`` points — the unit every paper figure is built from.
 All engines simulate the *identical* corpus from one process, so the
-ratios are engine-vs-engine numbers, not parallelism artefacts (the
-jit engine's internal host-thread streams are an engine property — its
-Python-loop competitors are host-call bound and cannot overlap chunks).
+ratios are engine-vs-engine numbers, not parallelism artefacts.  The
+jit engine is additionally timed at logical device counts 1/2/4
+(``--devices``, ``REPRO_DEVICES``, see repro.runtime.device_config) —
+the ``device_scaling`` rows — and every sharded run is asserted
+bit-identical to the single-device run in the same process, so a
+scaling number can never come from semantically divergent work.
 
 Because container timing is noisy run-to-run, every engine is measured
 **median-of-3 after a warmup run** (the warmup also absorbs the jit
@@ -24,7 +27,13 @@ corpus (see docs/performance.md):
     exist;
   * ``jit`` matches ``vec`` statistically on the sampled corpus
     (success rates within binomial sampling error; counter-based RNG,
-    see core/simulator_jit.py).
+    see core/simulator_jit.py);
+  * sharded ``jit`` (``--devices N > 1``) is bit-exact against the
+    single-device jit run on the sampled corpus (the CI device-matrix
+    gate).
+
+An empty corpus or comparison set is a hard error naming the section —
+a vacuous equivalence pass must never gate green.
 
 Results are written to ``BENCH_sim.json`` at the repo root — the
 committed copy is the perf baseline every future PR is compared
@@ -32,7 +41,7 @@ against (CI job ``perf-smoke`` prints the delta and *gates* on the
 equivalence checks).
 
     PYTHONPATH=src python -m benchmarks.perf_sim [--smoke]
-        [--check-equivalence] [--out BENCH_sim.json]
+        [--check-equivalence] [--devices N] [--out BENCH_sim.json]
         [--baseline BENCH_sim.json]
 
 ``--smoke`` runs a reduced corpus (32 points, shorter horizon) sized
@@ -49,8 +58,9 @@ import os
 import time
 from pathlib import Path
 
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
 REPEATS = 3
+DEVICE_COUNTS = (1, 2, 4)
 REPO_ROOT = Path(__file__).resolve().parent.parent
 DEFAULT_OUT = REPO_ROOT / "BENCH_sim.json"
 
@@ -74,7 +84,8 @@ def build_corpus(spec):
     return lib, Policy.mesc(), tasksets, seeds
 
 
-def _engine_fn(engine, lib, policy, tasksets, seeds, duration):
+def _engine_fn(engine, lib, policy, tasksets, seeds, duration,
+               devices=None):
     from repro.core.simulator import simulate
     from repro.core.simulator_vec import simulate_vbatch
     if engine == "event":
@@ -84,7 +95,8 @@ def _engine_fn(engine, lib, policy, tasksets, seeds, duration):
     backend = "numpy" if engine == "vec" else "jit"
     return lambda: simulate_vbatch(tasksets, lib, policy, seeds=seeds,
                                    duration=duration, batch_size=512,
-                                   select_backend=backend)
+                                   select_backend=backend,
+                                   devices=devices)
 
 
 def _timed(fn):
@@ -115,46 +127,83 @@ def binomial_bound(pbar: float, n: int) -> float:
         + 2.0 / n
 
 
-def check_equivalence(spec, results=None) -> dict:
-    """The three cross-engine contracts on the corpus (see module
+def check_equivalence(spec, results=None, devices=None,
+                      section="full") -> dict:
+    """The cross-engine contracts on the corpus (see module
     docstring).  Returns the equivalence report; raises SystemExit on
-    any violation.  ``results`` may carry already-simulated
-    ``{engine: [RunMetrics]}`` sampled-corpus outputs (measure() hands
-    its timed runs over) — only the missing pieces are simulated."""
+    any violation — including an *empty* corpus or comparison set,
+    which would otherwise vacuously pass every gate.  ``results`` may
+    carry already-simulated ``{engine: [RunMetrics]}`` sampled-corpus
+    outputs (measure() hands its timed runs over; the jit entry must
+    have run at ``devices``) — only the missing pieces are simulated.
+    ``devices > 1`` additionally gates sharded-vs-single-device jit
+    bit-exactness."""
     from repro.core.simulator import simulate
     from repro.core.simulator_vec import simulate_vbatch
     from repro.experiments.metrics import metrics_row
+    from repro.runtime.device_config import default_device_count
     lib, policy, tasksets, seeds = build_corpus(spec)
     n = len(tasksets)
+    if n == 0:
+        raise SystemExit(
+            f"check-equivalence: corpus section {section!r} is empty "
+            f"(utils={spec.get('utils')!r}, "
+            f"n_sets={spec.get('n_sets')!r}) — an empty comparison set "
+            "would vacuously pass every gate; refusing to report "
+            "success")
+
+    def _require(name, lst):
+        """Comparison sets must cover the corpus, 1:1 — an empty or
+        truncated set silently weakens every zip()-based gate below."""
+        if len(lst) != n:
+            raise SystemExit(
+                f"check-equivalence: section {section!r} comparison "
+                f"set {name!r} has {len(lst)} results for {n} corpus "
+                "points — refusing to gate on a partial comparison")
+        return lst
+
     duration = spec["duration"]
+    devices = default_device_count() if devices is None else devices
     results = results or {}
 
-    ev = results.get("event") or [
+    ev = _require("event", results.get("event") or [
         simulate(ts, lib, policy, duration=duration, seed=s)
-        for ts, s in zip(tasksets, seeds)]
-    vc = results.get("vec") or simulate_vbatch(
+        for ts, s in zip(tasksets, seeds)])
+    vc = _require("vec", results.get("vec") or simulate_vbatch(
         tasksets, lib, policy, seeds=seeds, duration=duration,
-        batch_size=512)
+        batch_size=512))
     vec_mismatch = sum(metrics_row(a) != metrics_row(b)
                        for a, b in zip(ev, vc))
 
     # zero-jitter corpus: no in-loop draws exist, jit must equal vec
     # bit-for-bit
-    vc_nom = simulate_vbatch(tasksets, lib, policy, seeds=seeds,
-                             duration=duration, batch_size=512,
-                             demand_profile="nominal")
-    jt_nom = simulate_vbatch(tasksets, lib, policy, seeds=seeds,
-                             duration=duration, batch_size=512,
-                             demand_profile="nominal",
-                             select_backend="jit")
+    vc_nom = _require("vec_nominal", simulate_vbatch(
+        tasksets, lib, policy, seeds=seeds, duration=duration,
+        batch_size=512, demand_profile="nominal"))
+    jt_nom = _require("jit_nominal", simulate_vbatch(
+        tasksets, lib, policy, seeds=seeds, duration=duration,
+        batch_size=512, demand_profile="nominal",
+        select_backend="jit", devices=devices))
     nom_mismatch = sum(metrics_row(a) != metrics_row(b)
                        for a, b in zip(vc_nom, jt_nom))
 
     # sampled corpus: jit draws from counter-based streams — success
     # rates must agree within binomial sampling error
-    jt = results.get("jit") or simulate_vbatch(
+    jt = _require("jit", results.get("jit") or simulate_vbatch(
         tasksets, lib, policy, seeds=seeds, duration=duration,
-        batch_size=512, select_backend="jit")
+        batch_size=512, select_backend="jit", devices=devices))
+
+    # sharded vs single-device jit: per-point keyed RNG draws make the
+    # device count pure execution placement — bit-exact, not just
+    # statistically equivalent (the CI device-matrix gate)
+    sharded_mismatch = None
+    if devices > 1:
+        jt_1 = _require("jit_devices1", simulate_vbatch(
+            tasksets, lib, policy, seeds=seeds, duration=duration,
+            batch_size=512, select_backend="jit", devices=1))
+        sharded_mismatch = sum(metrics_row(a) != metrics_row(b)
+                               for a, b in zip(jt, jt_1))
+
     rows_v = [metrics_row(m) for m in vc]
     rows_j = [metrics_row(m) for m in jt]
     statistical = {}
@@ -175,6 +224,10 @@ def check_equivalence(spec, results=None) -> dict:
         "jit_nominal_mismatched_points": nom_mismatch,
         "jit_statistical": statistical,
         "jit_statistical_ok": stat_ok,
+        "jit_devices": devices,
+        "sharded_exact_match_points":
+            None if sharded_mismatch is None else n - sharded_mismatch,
+        "sharded_mismatched_points": sharded_mismatch,
     }
     if vec_mismatch:
         raise SystemExit(f"{vec_mismatch}/{n} corpus points diverged "
@@ -184,20 +237,30 @@ def check_equivalence(spec, results=None) -> dict:
         raise SystemExit(f"{nom_mismatch}/{n} zero-jitter corpus points "
                          "diverged between vec and jit — nominal "
                          "exact-equivalence contract violated")
+    if sharded_mismatch:
+        raise SystemExit(
+            f"{sharded_mismatch}/{n} corpus points diverged between "
+            f"jit at devices={devices} and devices=1 — sharded "
+            "bit-exactness contract violated")
     if not stat_ok:
         raise SystemExit("jit-vs-vec statistical equivalence violated: "
                          f"{statistical}")
     return report
 
 
-def measure(spec, skip_equivalence: bool = False):
+def measure(spec, skip_equivalence: bool = False, devices=None,
+            section="full"):
+    from repro.experiments.metrics import metrics_row
+    from repro.runtime.device_config import default_device_count
     lib, policy, tasksets, seeds = build_corpus(spec)
     n = len(tasksets)
+    devices = default_device_count() if devices is None else devices
     engines = {}
     results = {}
     for engine in ENGINES:
         fn = _engine_fn(engine, lib, policy, tasksets, seeds,
-                        spec["duration"])
+                        spec["duration"],
+                        devices=devices if engine == "jit" else None)
         results[engine], samples = _timed(fn)
         engines[engine] = _stats(samples, n)
     # per-step XLA kernel count of the compiled lockstep body at the
@@ -210,10 +273,39 @@ def measure(spec, skip_equivalence: bool = False):
         tasksets[:nk], lib, policy, seeds=seeds[:nk],
         duration=spec["duration"])
 
+    # jit pts/s per logical device count, every sharded run asserted
+    # bit-identical to the devices=1 rows *from the same process* — a
+    # scaling number can never come from semantically divergent work
+    import jax
+    have = jax.local_device_count()
+    scaling = {}
+    rows_1 = None
+    for d in DEVICE_COUNTS:
+        if d > have:
+            scaling[str(d)] = {"skipped":
+                               f"only {have} logical devices in pool"}
+            continue
+        fn = _engine_fn("jit", lib, policy, tasksets, seeds,
+                        spec["duration"], devices=d)
+        res, samples = _timed(fn)
+        st = _stats(samples, n)
+        rows = [metrics_row(m) for m in res]
+        if rows_1 is None:            # DEVICE_COUNTS starts at 1
+            rows_1 = rows
+        st["bit_exact_vs_devices1"] = rows == rows_1
+        if not st["bit_exact_vs_devices1"]:
+            raise SystemExit(
+                f"sharded jit (devices={d}) diverged from devices=1 "
+                f"on the {section!r} corpus — bit-exactness contract "
+                "violated")
+        scaling[str(d)] = st
+    engines["jit"]["device_scaling"] = scaling
+
     # reuse the timed sampled-corpus runs; only the two nominal-profile
     # runs inside the check are freshly simulated
     equivalence = None if skip_equivalence \
-        else check_equivalence(spec, results)
+        else check_equivalence(spec, results, devices=devices,
+                               section=section)
     sec = {e: engines[e]["seconds"] for e in ENGINES}
     return {
         "corpus": {"style": "fig8", "policy": policy.name,
@@ -271,6 +363,11 @@ def main() -> None:
     ap.add_argument("--skip-equivalence", action="store_true",
                     help="measure timings only (CI's measure step — its "
                          "gating sibling already ran the checks)")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="logical host devices for the jit engine "
+                         "(default: REPRO_DEVICES or 1); the "
+                         "device_scaling rows always cover "
+                         f"{DEVICE_COUNTS}")
     ap.add_argument("--out", default=str(DEFAULT_OUT),
                     help="where to write the updated BENCH_sim.json")
     ap.add_argument("--baseline", default=str(DEFAULT_OUT),
@@ -280,23 +377,37 @@ def main() -> None:
     section = "smoke" if args.smoke else "full"
     spec = SMOKE if args.smoke else FULL
 
+    # the logical-device pool must be forced before the first jax
+    # computation (XLA reads the flag once); cover the scaling rows too
+    from repro.runtime.device_config import (configure_host_devices,
+                                             default_device_count)
+    devices = default_device_count() if args.devices is None \
+        else args.devices
+    configure_host_devices(max(devices, max(DEVICE_COUNTS)))
+
     if args.check_equivalence:
-        report = check_equivalence(spec)
+        report = check_equivalence(spec, devices=devices,
+                                   section=section)
+        sharded = report["sharded_exact_match_points"]
         print(f"equivalence,{section},"
               f"vec_exact={report['vec_exact_match_points']},"
               f"jit_nominal_exact="
               f"{report['jit_nominal_exact_match_points']},"
-              f"jit_statistical_ok={report['jit_statistical_ok']}")
+              f"jit_statistical_ok={report['jit_statistical_ok']},"
+              f"devices={report['jit_devices']},"
+              f"sharded_exact="
+              f"{'n/a' if sharded is None else sharded}")
         return
 
     baseline = load(Path(args.baseline))
-    result = measure(spec, skip_equivalence=args.skip_equivalence)
+    result = measure(spec, skip_equivalence=args.skip_equivalence,
+                     devices=devices, section=section)
     if result["equivalence"] is None:
         # timings-only run: carry the baseline's last verified block
         result["equivalence"] = baseline.get("sections", {}).get(
             section, {}).get("equivalence")
 
-    from repro.core.simulator_jit import default_streams
+    import jax
     doc = load(Path(args.out))
     doc["schema_version"] = SCHEMA_VERSION
     doc.setdefault("sections", {})
@@ -304,8 +415,8 @@ def main() -> None:
     for k, v in baseline.get("sections", {}).items():
         doc["sections"].setdefault(k, v)
     doc["sections"][section] = result
-    doc["host"] = {"cpus": os.cpu_count(),
-                   "jit_streams": default_streams()}
+    doc["host"] = {"cpus": os.cpu_count(), "devices": devices,
+                   "logical_devices": jax.local_device_count()}
 
     Path(args.out).write_text(json.dumps(doc, indent=1, sort_keys=True)
                               + "\n")
@@ -316,6 +427,12 @@ def main() -> None:
               f"spread={e['spread_pct']}%")
     print(f"jit_kernels,{section},"
           f"{result['engines']['jit']['xla_kernels']}")
+    for d, st in result["engines"]["jit"]["device_scaling"].items():
+        if "points_per_sec" in st:
+            print(f"jit_devices,{d},{st['points_per_sec']}pts/s,"
+                  f"bit_exact={st['bit_exact_vs_devices1']}")
+        else:
+            print(f"jit_devices,{d},{st['skipped']}")
     print(f"speedup,vec_vs_event,{result['speedup_vec_vs_event']}x")
     print(f"speedup,jit_vs_vec,{result['speedup_jit_vs_vec']}x")
     eq = result["equivalence"]

@@ -97,9 +97,9 @@ def sweep(full: bool = False) -> FuncSweep:
                           items, cache=False)
 
 
-def main(full: bool = False, engine: str = "event",
+def main(full: bool = False, engine: str = "event", devices=None,
          **campaign_kw):
-    # engine: accepted for run.py uniformity; this figure has no
+    # engine/devices: accepted for run.py uniformity; this figure has no
     # single-accelerator DES sweep for the vec backend to run
     del engine
     cells = Campaign(sweep(full), **campaign_kw).collect()

@@ -7,15 +7,18 @@ pure cache replay.  Prints ``name,us_per_call,derived`` CSV summary
 lines (plus the per-figure CSV blocks above them).
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--only fig7,fig8]
-        [--engine event|vec|jit] [--workers N] [--cache-dir DIR]
-        [--no-cache] [--smoke]
+        [--engine event|vec|jit] [--devices N] [--workers N]
+        [--cache-dir DIR] [--no-cache] [--smoke]
 
 ``--full`` uses the paper's 1000 task sets per point (slow); default is
 a statistically-meaningful reduction.  ``--engine vec`` routes the
 single-accelerator simulation sweeps through the vectorized batch
 backend (``core.simulator_vec``); ``--engine jit`` through the fully-
 compiled ``jax.lax.while_loop`` backend (``core.simulator_jit``,
-statistically equivalent RNG contract).  Each engine has its own cache
+statistically equivalent RNG contract).  ``--devices N`` shards the
+jit engine's point axis over N logical host devices (bit-identical
+results and shared cache entries at any count — a pure throughput
+knob; see docs/performance.md).  Each engine has its own cache
 namespace, see docs/performance.md.  ``--smoke`` runs a 2-point sweep
 end-to-end (used by CI).
 """
@@ -25,12 +28,13 @@ import argparse
 import sys
 
 
-def smoke(engine: str = "event", **campaign_kw) -> None:
+def smoke(engine: str = "event", devices=None, **campaign_kw) -> None:
     """Tiny end-to-end campaign: 2 points through the full engine path."""
     from repro.core import Policy
     from repro.experiments import Campaign, Sweep
     sweep = Sweep(name="smoke", policies=(Policy.mesc(),), utils=(0.7,),
-                  n_sets=2, duration=2e6, engine=engine)
+                  n_sets=2, duration=2e6, engine=engine,
+                  devices=devices)
     camp = Campaign(sweep, **campaign_kw)
     rows = camp.collect()
     print("point,policy,u,seed,jobs,success_all")
@@ -63,12 +67,19 @@ def main() -> None:
                     help="simulation backend for the sim sweeps "
                          "(vec = vectorized batch engine, jit = fully-"
                          "compiled jax.lax.while_loop backend)")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="logical host devices the jit engine shards "
+                         "points over (requires --engine jit; results "
+                         "and cache entries are identical at any "
+                         "count)")
     args = ap.parse_args()
+    if args.devices is not None and args.engine != "jit":
+        ap.error("--devices requires --engine jit")
     campaign_kw = dict(workers=args.workers, cache_dir=args.cache_dir,
                        use_cache=not args.no_cache)
 
     if args.smoke:
-        smoke(engine=args.engine, **campaign_kw)
+        smoke(engine=args.engine, devices=args.devices, **campaign_kw)
         return
 
     from benchmarks import (fig2_instruction_costs, fig6_banks,
@@ -91,7 +102,8 @@ def main() -> None:
     for name in only:
         print(f"# === {name} ===", file=sys.stderr)
         try:
-            table[name](full=args.full, engine=args.engine, **campaign_kw)
+            table[name](full=args.full, engine=args.engine,
+                        devices=args.devices, **campaign_kw)
         except Exception as e:  # keep the harness going
             print(f"{name},0,ERROR:{type(e).__name__}:{e}")
 

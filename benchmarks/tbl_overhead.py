@@ -42,18 +42,20 @@ def cs_row(workload: str) -> dict:
             "save_total": br.total, "restore_total": rr.total}
 
 
-def sweeps(full: bool = False, engine: str = "event"):
+def sweeps(full: bool = False, engine: str = "event", devices=None):
     n_sets = max((1000 if full else DEFAULT_SETS) // 2, 30)
     names = sorted(cached_library("sim"))
     return (FuncSweep.over("tbl_overhead_cs",
                            "benchmarks.tbl_overhead:cs_row",
                            [{"workload": n} for n in names]),
             Sweep(name="tbl_overhead", policies=(Policy.mesc(),),
-                  utils=UTILS, n_sets=n_sets, engine=engine))
+                  utils=UTILS, n_sets=n_sets, engine=engine,
+                  devices=devices))
 
 
-def main(full: bool = False, engine: str = "event", **campaign_kw):
-    cs_sweep, sim_sweep = sweeps(full, engine)
+def main(full: bool = False, engine: str = "event", devices=None,
+         **campaign_kw):
+    cs_sweep, sim_sweep = sweeps(full, engine, devices)
     n_sets = sim_sweep.n_sets
     with Timer() as t:
         cs_rows = Campaign(cs_sweep, **campaign_kw).collect()

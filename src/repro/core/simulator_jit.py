@@ -123,10 +123,17 @@ Implementation notes
     counts) ride in the packed ``pi`` block and are updated
     incrementally at the NumPy engine's sites; pick_next keys are
     rank-compressed int32.
-  * Chunks are streamed from a small host thread pool
-    (``default_streams``, ``REPRO_JIT_STREAMS``): the compiled loop
-    releases the GIL, so independent chunks overlap on separate cores
-    — something the host-call-bound Python engines cannot do.
+  * Batches are dispatched as *device superchunks*: ``shard_map`` over
+    a 1-D mesh of logical host devices (``REPRO_DEVICES``,
+    ``runtime.device_config``) splits the point axis of one
+    ``devices x 64`` superchunk so every logical device runs its own
+    copy of the while_loop on its point-shard — simulation points are
+    independent, so the mapped body has no collectives and each
+    device's loop halts on its own shard's quiescence.  Per-point
+    keyed RNG draws make the sharded output bit-identical to the
+    single-device engine at any device count (gated in CI at
+    ``REPRO_DEVICES`` 2 and 4).  The carry is donated to the runner,
+    so the dominant buffers are reused in place.
   * Everything runs in float64/int64 under ``jax.experimental
     .enable_x64`` (scoped, not process-global): event times must not
     round-trip through float32.
@@ -140,8 +147,7 @@ from __future__ import annotations
 import functools
 import os
 import re
-from concurrent.futures import ThreadPoolExecutor
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -168,6 +174,20 @@ from repro.core.simulator_vec import (_BB, _C_CI, _C_CIQ, _C_NONE, _C_PI,
 # re-exported here as the canonical name
 from repro.core.simulator_vec import JIT_SIM_SEMANTICS_VERSION  # noqa: F401
 from repro.core.task import TaskParams
+# env validation + logical-device plumbing live with the other runtime
+# environment code; both are importable without JAX
+from repro.runtime.device_config import (_env_int, configure_host_devices,
+                                         default_device_count,
+                                         jax_initialized,
+                                         resolve_device_count)
+
+# XLA reads --xla_force_host_platform_device_count exactly once, at
+# first backend init — which in a campaign process is triggered by this
+# engine's first computation.  Forcing the REPRO_DEVICES pool at import
+# (env mutation only, no jax touched) guarantees the flag is in place
+# even when the caller runs a single-device batch before a sharded one.
+if default_device_count() > 1 and not jax_initialized():
+    configure_host_devices()
 
 # pending-interrupt table: primary width, the give-up bound for the
 # host-side double-on-overflow retry ladder, and the padded sub-batch
@@ -186,10 +206,9 @@ _RETRY_BUCKET = 64
 # semantics-free by diffing against the unpruned graph).
 _PRUNE_STALE = True
 
-# lockstep width per compiled chunk: small enough to stay
-# cache-resident and to give the stream threads work to overlap,
+# lockstep width per device: small enough to stay cache-resident,
 # large enough to amortize per-step fixed cost (measured optimum on
-# the 512-point BENCH corpus)
+# the 512-point BENCH corpus); a superchunk is devices * this
 _STREAM_CHUNK = 64
 
 # "no eligible task" sentinel for the rank-compressed int32 pick_next
@@ -247,23 +266,6 @@ def require_jax(backend: str = "jit") -> None:
             f"select_backend={backend!r} needs JAX, which is not "
             "importable in this environment; install jax (CPU wheels: "
             "`pip install jax`) or use select_backend='numpy'")
-
-
-def _env_int(name: str, default: int, minimum: int = 1) -> int:
-    """Read a positive-integer env override, rejecting junk loudly."""
-    raw = os.environ.get(name)
-    if raw is None or not raw.strip():
-        return default
-    try:
-        val = int(raw)
-    except ValueError:
-        raise ValueError(
-            f"{name}={raw!r} is not an integer; set {name} to an "
-            f"integer >= {minimum} or unset it") from None
-    if val < minimum:
-        raise ValueError(
-            f"{name}={raw!r} must be >= {minimum}; fix or unset {name}")
-    return val
 
 
 def _table_width() -> int:
@@ -954,17 +956,72 @@ def _build_run(use_banks: bool, drop_lo: bool, preempt: str,
         return jax.lax.while_loop(cond, functools.partial(_step, tb, sc),
                                   carry)
 
-    return jax.jit(_run)
+    return _run
+
+
+# tb/sc/carry dict layouts, fixed by _tables/_run_once/_carry0: the
+# shard_map partition specs below are derived from these key lists, so
+# they live next to the functions that define the dicts
+_TB_PER_POINT = frozenset({
+    "seed64", "valid", "key32", "period", "deadline_rel", "c_lo",
+    "is_hi", "eta", "etab", "prog_id"})
+_TB_KEYS = tuple(sorted(_TB_PER_POINT) + [
+    "prog_total", "seg_key", "seg_cycles", "seg_pat", "pat_cumsum",
+    "op_key", "op_end", "op_hi"])
+_SC_KEYS = ("t_sr", "overrun_prob", "cf", "duration", "max_steps")
+_CARRY_KEYS = (
+    "flags", "exec_cy", "demand", "job_deadline", "blocked_since",
+    "next_release", "tick_release", "res_bytes", "acc_bytes",
+    "ctx_acc", "ctx_spad", "ev_time", "ev_pay", "pi", "pf", "steps")
 
 
 @functools.lru_cache(maxsize=None)
 def _compiled_run(use_banks: bool, drop_lo: bool, preempt: str,
-                  nominal: bool, prune: bool):
-    """One jitted runner per static policy/profile class — the memo is
-    what makes 'one compilation per shape/config' true: jax.jit caches
-    specializations per *function object*, so handing back a fresh
-    closure per call would retrace and recompile every chunk."""
-    return _build_run(use_banks, drop_lo, preempt, nominal, prune)
+                  nominal: bool, prune: bool, devices: int = 1):
+    """One jitted runner per static (policy/profile, device count)
+    class — the memo is what makes 'one compilation per shape/config'
+    true: jax.jit caches specializations per *function object*, so
+    handing back a fresh closure per call would retrace and recompile
+    every chunk.
+
+    ``devices > 1`` wraps the runner in ``shard_map`` over a 1-D
+    logical-device mesh: per-point tables and the whole carry shard
+    along the point axis, the global program tables and scalars
+    replicate, and — because simulation points are independent — the
+    mapped body needs no collectives (``check_rep=False``: there is no
+    replicated output for shard_map to prove anything about).  Each
+    device's while_loop halts when its own point-shard quiesces, so a
+    fast shard does not wait for a slow one's extra steps.  The carry
+    (the dominant allocation) is donated in both variants.
+    """
+    run = _build_run(use_banks, drop_lo, preempt, nominal, prune)
+    if devices == 1:
+        return jax.jit(run, donate_argnums=(2,))
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.runtime.sharding import logical_device_mesh
+
+    mesh = logical_device_mesh(devices)
+    tb_specs = {k: P("dev") if k in _TB_PER_POINT else P()
+                for k in _TB_KEYS}
+    sc_specs = {k: P() for k in _SC_KEYS}
+    carry_specs = {k: P("dev") for k in _CARRY_KEYS}
+
+    def _dev_body(tb, sc, c):
+        # each device runs the scalar-step runner on its point-shard;
+        # the (devices,) step counter contributes one lane per device
+        c = dict(c)
+        c["steps"] = c["steps"][0]
+        out = run(tb, sc, c)
+        out["steps"] = out["steps"][None]
+        return out
+
+    return jax.jit(
+        shard_map(_dev_body, mesh=mesh,
+                  in_specs=(tb_specs, sc_specs, carry_specs),
+                  out_specs=carry_specs, check_rep=False),
+        donate_argnums=(2,))
 
 
 # ----------------------------------------------------------------------
@@ -1011,12 +1068,13 @@ def _tables(b: _VecBatch, seeds: Sequence[int]) -> Dict[str, "jnp.ndarray"]:
     }
 
 
-def _carry0(b: _VecBatch, seeds: Sequence[int],
-            K: int) -> Dict[str, "jnp.ndarray"]:
+def _carry0(b: _VecBatch, seeds: Sequence[int], K: int,
+            devices: int = 1) -> Dict[str, "jnp.ndarray"]:
     """Initial carry: the freshly-initialized NumPy batch state (which
     already drew the release phases from each point's host RNG) as the
     grouped tensors of the module docstring, plus empty packed metric
-    blocks and an interrupt table of width ``K``."""
+    blocks and an interrupt table of width ``K``.  The step counter is
+    scalar on one device and one lane per device when sharded."""
     P, T = b.P, b.T
     pi0 = np.zeros((P, _PI_W), np.int32)
     pi0[:, _I_RUN] = -1
@@ -1039,7 +1097,8 @@ def _carry0(b: _VecBatch, seeds: Sequence[int],
         "ev_pay": jnp.full((P, K), -1, jnp.int32),
         "pi": jnp.asarray(pi0),
         "pf": jnp.asarray(pf0),
-        "steps": jnp.zeros((), jnp.int64),
+        "steps": jnp.zeros((), jnp.int64) if devices == 1
+        else jnp.zeros((devices,), jnp.int64),
     }
 
 
@@ -1051,25 +1110,21 @@ def _max_steps(b: _VecBatch, duration: float) -> int:
     return int(64 * (rel.max() + 16) + 65536)
 
 
-# (config, P, T, K) tuples whose XLA executable is already built in
-# this process — lets simulate_jbatch skip the serial warm-up span and
-# pool every chunk immediately on repeat runs
-_WARM: set = set()
-
-
-def _warm_key(policy: Policy, nominal: bool, P: int, T: int,
-              K: int) -> tuple:
-    return (policy.use_banks, policy.drop_lo_in_hi, policy.preemption,
-            nominal, _PRUNE_STALE, P, T, K)
-
-
 def _run_once(b: _VecBatch, policy: Policy, seeds: Sequence[int],
               duration: float, overrun_prob: float, cf: float,
-              nominal: bool, K: int) -> Dict[str, np.ndarray]:
+              nominal: bool, K: int,
+              devices: int = 1) -> Dict[str, np.ndarray]:
     """One compiled run of a prepared batch at interrupt-table width
-    ``K``; returns the final carry as NumPy arrays."""
+    ``K``, sharded over ``devices`` logical devices; returns the final
+    carry as NumPy arrays."""
+    if b.P % max(devices, 1):
+        raise ValueError(
+            f"sharded run needs the point count ({b.P}) divisible by "
+            f"the device count ({devices}); the span planner pads to "
+            "a devices x chunk rectangle")
     run = _compiled_run(policy.use_banks, policy.drop_lo_in_hi,
-                        policy.preemption, nominal, _PRUNE_STALE)
+                        policy.preemption, nominal, _PRUNE_STALE,
+                        devices)
     from jax.experimental import enable_x64
     max_steps = _max_steps(b, duration)
     # event times are float64; everything (array upload included) must
@@ -1081,55 +1136,58 @@ def _run_once(b: _VecBatch, policy: Policy, seeds: Sequence[int],
               "cf": jnp.float64(cf),
               "duration": jnp.float64(duration),
               "max_steps": jnp.int64(max_steps)}
-        final = run(tb, sc, _carry0(b, seeds, K))
+        final = run(tb, sc, _carry0(b, seeds, K, devices=devices))
         final = {k: np.asarray(v) for k, v in final.items()}
     # unpack the layout-dependent bits here so _run_chunk (and its
     # tests) stay independent of the packed-block column order
     final["overflow"] = final["pi"][:, _I_OVF] != 0
-    if final["steps"] >= max_steps and final["pi"][:, _I_ALIVE].any():
+    if int(np.max(final["steps"])) >= max_steps \
+            and final["pi"][:, _I_ALIVE].any():
         raise RuntimeError(
             f"jit engine: lockstep loop hit the {max_steps}-step "
             "safety bound with live points remaining")
-    _WARM.add(_warm_key(policy, nominal, b.P, b.T, K))
     return final
 
 
 def _run_chunk(tasksets, programs, policy, seeds, duration, overrun_prob,
                cf, demand_profile: str,
-               point_ids: Optional[Sequence[int]] = None
-               ) -> List[RunMetrics]:
-    """Simulate one chunk with the per-point overflow-retry ladder.
+               point_ids: Optional[Sequence[int]] = None,
+               devices: int = 1) -> List[RunMetrics]:
+    """Simulate one (super)chunk with the per-point overflow-retry
+    ladder.
 
     The chunk first runs at the narrow primary interrupt table (ample
-    for typical points, rarer still with stale-interrupt pruning).
-    Points whose table overflowed — a per-point, batch-composition-
-    independent event — are re-run in small padded sub-batches at
+    for typical points, rarer still with stale-interrupt pruning),
+    sharded over ``devices`` logical devices when asked.  Points whose
+    table overflowed — a per-point, batch-composition-independent
+    event — are re-run in small padded single-device sub-batches at
     doubled widths until they fit; the counter-based RNG makes every
     retry bit-deterministic, so a point's result never depends on
-    which batch or table width executed it.  A point that still
-    overflows at the maximum width raises a loud, point-identified
-    error: metrics computed from a saturated table would silently drop
-    interrupts.
+    which batch, table width, or device count executed it.  A point
+    that still overflows at the maximum width raises a loud,
+    point-identified error: metrics computed from a saturated table
+    would silently drop interrupts.
     """
     nominal = demand_profile == "nominal"
     out: List[Optional[RunMetrics]] = [None] * len(tasksets)
     idx = list(range(len(tasksets)))
     K = _table_width()
     k_max = _table_max(K)
+    first = True
     while idx:
         ts = [tasksets[i] for i in idx]
         sd = [int(seeds[i]) for i in idx]
         # pad retry sub-batches up to the bucket size so the ladder
         # reuses one compilation per (bucket, K) instead of one per
         # subset shape (padded copies are simulated and discarded)
-        if K > _table_width() and len(ts) < _RETRY_BUCKET:
+        if not first and len(ts) < _RETRY_BUCKET:
             pad = _RETRY_BUCKET - len(ts)
             ts = ts + [ts[-1]] * pad
             sd = sd + [sd[-1]] * pad
         b = _VecBatch(ts, programs, policy, seeds=sd, duration=duration,
                       overrun_prob=overrun_prob, cf=cf)
         final = _run_once(b, policy, sd, duration, overrun_prob, cf,
-                          nominal, K)
+                          nominal, K, devices=devices if first else 1)
         metrics = _assemble(b, final, duration)
         overflow = final["overflow"]
         redo = []
@@ -1140,6 +1198,7 @@ def _run_chunk(tasksets, programs, policy, seeds, duration, overrun_prob,
                 out[i] = metrics[pos]
         idx = redo
         K *= 2
+        first = False
         if idx and K > k_max:
             pts = ", ".join(
                 f"(taskset {point_ids[i] if point_ids is not None else i}"
@@ -1200,19 +1259,6 @@ def _assemble(b: _VecBatch, s: Dict[str, np.ndarray],
 # Public entry point (called by simulator_vec.simulate_vbatch)
 # ----------------------------------------------------------------------
 
-def default_streams() -> int:
-    """Concurrent host threads driving independent compiled chunks.
-
-    The compiled engine releases the GIL for the whole while_loop, so
-    independent chunks genuinely overlap on separate cores — an engine
-    property the Python-loop backends cannot share (their lockstep is
-    host-call bound).  Override with ``REPRO_JIT_STREAMS`` (a positive
-    integer; junk values raise ``ValueError`` instead of silently
-    misconfiguring the pool)."""
-    return _env_int("REPRO_JIT_STREAMS",
-                    max(min(2, os.cpu_count() or 1), 1))
-
-
 def lockstep_kernel_count(tasksets: Sequence[List[TaskParams]],
                           programs: Dict[str, Program], policy: Policy,
                           *, seeds: Sequence[int], duration: float = 2e7,
@@ -1263,16 +1309,51 @@ def lockstep_kernel_count(tasksets: Sequence[List[TaskParams]],
     return sum(1 for op in best if op not in free)
 
 
+def _plan_spans(n: int, chunk: int,
+                devices: int) -> List[Tuple[List[int], int, int]]:
+    """Split ``n`` points into ``(indices, real, devices)`` spans.
+
+    A span is one dispatch: a ``d * c`` rectangle (``c`` points per
+    logical device) padded — by duplicating its last point — so
+    shard_map sees equal shards; padded copies are simulated and
+    discarded by the caller.  The first (possibly only) span of a
+    small batch shrinks ``d`` and ``c`` to the batch instead of
+    simulating a mostly-padding superchunk; later ragged tails pad up
+    to the full common shape so they reuse the superchunk's
+    compilation — the same rule the single-device engine applied to
+    its ragged tail (and ``devices=1`` reproduces the old plan
+    exactly).
+    """
+    spans: List[Tuple[List[int], int, int]] = []
+    lo = 0
+    while lo < n:
+        real = min(chunk * devices, n - lo)
+        if lo == 0:
+            d = min(devices, real)
+            c = min(chunk, -(-real // d))
+        else:
+            d, c = devices, chunk
+        idxs = list(range(lo, lo + real))
+        idxs += [idxs[-1]] * (d * c - real)
+        spans.append((idxs, real, d))
+        lo += real
+    return spans
+
+
 def simulate_jbatch(tasksets: Sequence[List[TaskParams]],
                     programs: Dict[str, Program], policy: Policy, *,
                     seeds: Sequence[int], duration: float = 2e7,
                     overrun_prob: float = 0.3, cf: float = 2.0,
                     batch_size: int = 256,
                     demand_profile: str = "sampled",
-                    streams: Optional[int] = None) -> List[RunMetrics]:
+                    devices: Optional[int] = None) -> List[RunMetrics]:
     """Fully-compiled batch simulation: one ``lax.while_loop`` per
-    chunk of points, no host work inside the loop, chunks streamed
-    concurrently from ``streams`` host threads.
+    superchunk of points, no host work inside the loop, the point axis
+    sharded over ``devices`` logical devices (``None``: the
+    ``REPRO_DEVICES`` default; see ``runtime.device_config``).
+
+    Per-point keyed RNG draws make the result bit-identical at every
+    device count — sharding is purely a throughput knob.
 
     Prefer :func:`repro.core.simulator_vec.simulate_vbatch` with
     ``select_backend="jit"`` — it validates arguments and routes here.
@@ -1282,49 +1363,15 @@ def simulate_jbatch(tasksets: Sequence[List[TaskParams]],
     n = len(tasksets)
     if n != len(seeds):
         raise ValueError(f"{n} tasksets vs {len(seeds)} seeds")
-    streams = default_streams() if streams is None else max(streams, 1)
-    k0 = _table_width()
-    # small chunks keep the lockstep state cache-resident and give the
-    # thread pool work to overlap (64 measured fastest on the BENCH
-    # corpus — see docs/performance.md); the ragged tail span is
-    # padded to the common chunk shape so it reuses the same
-    # compilation (padded copies are simulated and discarded)
+    devices = resolve_device_count(devices)
+    # small per-device chunks keep the lockstep state cache-resident
+    # (64 measured fastest on the BENCH corpus — docs/performance.md)
     chunk = max(1, min(batch_size, _STREAM_CHUNK))
-    spans = []
-    for lo in range(0, n, chunk):
-        idxs = list(range(lo, min(lo + chunk, n)))
-        real = len(idxs)
-        if lo and real < chunk:
-            idxs = idxs + [idxs[-1]] * (chunk - real)
-        spans.append((idxs, real))
-
-    def go(span):
-        idxs, real = span
+    out: List[RunMetrics] = []
+    for idxs, real, d in _plan_spans(n, chunk, devices):
         part = _run_chunk([tasksets[i] for i in idxs], programs, policy,
                           [int(seeds[i]) for i in idxs], duration,
                           overrun_prob, cf, demand_profile,
-                          point_ids=idxs)
-        return part[:real]
-
-    def span_warm(span):
-        idxs, _ = span
-        T = max(len(tasksets[i]) for i in idxs)
-        return _warm_key(policy, demand_profile == "nominal",
-                         len(idxs), T, k0) in _WARM
-
-    if streams == 1 or len(spans) == 1:
-        parts = [go(sp) for sp in spans]
-    elif all(span_warm(sp) for sp in spans):
-        # every span's executable is already built: pool everything
-        with ThreadPoolExecutor(max_workers=streams) as ex:
-            parts = list(ex.map(go, spans))
-    else:
-        # run the first span serially so the (chunk, K0) compilation
-        # is warm before the pool fans out over the rest
-        parts = [go(spans[0])]
-        with ThreadPoolExecutor(max_workers=streams) as ex:
-            parts += list(ex.map(go, spans[1:]))
-    out: List[RunMetrics] = []
-    for part in parts:
-        out.extend(part)
+                          point_ids=idxs, devices=d)
+        out.extend(part[:real])
     return out

@@ -54,7 +54,7 @@ its own cache salt; see docs/performance.md.
 from __future__ import annotations
 
 import warnings
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -1014,7 +1014,8 @@ def simulate_vbatch(tasksets: Sequence[List[TaskParams]],
                     overrun_prob: float = 0.3, cf: float = 2.0,
                     batch_size: int = 256,
                     select_backend: str = "numpy",
-                    demand_profile: str = "sampled") -> List[RunMetrics]:
+                    demand_profile: str = "sampled",
+                    devices: Optional[int] = None) -> List[RunMetrics]:
     """Vectorized batch counterpart of :func:`repro.core.simulator
     .simulate_batch`: one independent simulated point per (taskset,
     seed) pair, all points advanced in lockstep SoA batches.
@@ -1033,7 +1034,11 @@ def simulate_vbatch(tasksets: Sequence[List[TaskParams]],
     with the deterministic C_LO budget (the zero-jitter profile used by
     the cross-backend exact-equivalence gate).  ``batch_size`` bounds
     the lockstep width so a straggler point cannot serialize an
-    arbitrarily large batch.
+    arbitrarily large batch.  ``devices`` shards the jit backend's
+    point axis over that many logical devices (``None``: the
+    ``REPRO_DEVICES`` default; bit-identical results at any count —
+    see ``repro.runtime.device_config``); the host backends are
+    single-device, so an explicit count above 1 is rejected.
     """
     if select_backend not in BACKENDS:
         raise ValueError(
@@ -1061,7 +1066,12 @@ def simulate_vbatch(tasksets: Sequence[List[TaskParams]],
         return simulator_jit.simulate_jbatch(
             tasksets, programs, policy, seeds=seeds, duration=duration,
             overrun_prob=overrun_prob, cf=cf, batch_size=batch_size,
-            demand_profile=demand_profile)
+            demand_profile=demand_profile, devices=devices)
+    if devices is not None and devices != 1:
+        raise ValueError(
+            f"devices={devices} requires select_backend='jit' — the "
+            f"{select_backend!r} backend runs on the host and cannot "
+            "shard over logical devices")
     out: List[RunMetrics] = []
     for lo in range(0, len(tasksets), batch_size):
         chunk_ts = list(tasksets[lo:lo + batch_size])

@@ -103,7 +103,8 @@ def _run_sim(point: SimPoint) -> Dict[str, Any]:
                             overrun_prob=point.overrun_prob,
                             cf=point.cf,
                             select_backend="numpy" if point.engine == "vec"
-                            else "jit")[0]
+                            else "jit",
+                            devices=point.devices)[0]
     else:
         m = simulate(tasks, programs, policy, duration=point.duration,
                      seed=point.seed, overrun_prob=point.overrun_prob,
@@ -147,13 +148,13 @@ def _execute_chunk(payloads: List[Dict[str, Any]]) -> List[Dict[str, Any]]:
         point = point_from_dict(d)
         if isinstance(point, SimPoint) and point.engine in ("vec", "jit"):
             key = (point.engine, point.policy, point.duration, point.cf,
-                   point.overrun_prob, point.library)
+                   point.overrun_prob, point.library, point.devices)
             groups.setdefault(key, []).append((i, point))
         elif isinstance(point, FuncPoint):
             rows[i] = _run_func(point)
         else:
             rows[i] = _run_sim(point)
-    for (engine, pol_items, duration, cf, op, library), items \
+    for (engine, pol_items, duration, cf, op, library, devices), items \
             in groups.items():
         programs = cached_library(library)
         policy = policy_from_dict(dict(pol_items))
@@ -164,7 +165,8 @@ def _execute_chunk(payloads: List[Dict[str, Any]]) -> List[Dict[str, Any]]:
                              duration=duration, overrun_prob=op, cf=cf,
                              batch_size=VEC_CHUNK,
                              select_backend="numpy" if engine == "vec"
-                             else "jit")
+                             else "jit",
+                             devices=devices)
         for (i, pt), m in zip(items, ms):
             rows[i] = metrics_row(
                 m, policy=policy.name, u=pt.u, gamma=pt.gamma,

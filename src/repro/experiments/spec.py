@@ -28,7 +28,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
-from typing import Any, Dict, Iterator, List, Sequence, Tuple
+from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
 
 from repro.core.scheduler import Policy
 from repro.core.simulator import SIM_SEMANTICS_VERSION
@@ -75,6 +75,7 @@ class SimPoint:
     overrun_prob: float
     library: str = "sim"                  # 'sim' (no arch:*) | 'all'
     engine: str = "event"                 # 'event' | 'vec' | 'jit'
+    devices: Optional[int] = None         # jit only: logical devices
 
     kind = "sim"
 
@@ -98,6 +99,10 @@ class SimPoint:
             d["jit_sim_v"] = JIT_SIM_SEMANTICS_VERSION
         else:
             d["vec_sim_v"] = VEC_SIM_SEMANTICS_VERSION
+        # devices rides in worker payloads but never in cache keys —
+        # see key(); omitting the default keeps old payloads identical
+        if self.devices is None:
+            d.pop("devices")
         return d
 
     @staticmethod
@@ -109,10 +114,17 @@ class SimPoint:
             duration=d["duration"], cf=d["cf"],
             overrun_prob=d["overrun_prob"],
             library=d.get("library", "sim"),
-            engine=d.get("engine", "event"))
+            engine=d.get("engine", "event"),
+            devices=d.get("devices"))
 
     def key(self) -> str:
-        return canonical_hash(self.to_dict())
+        # the sharded jit engine is bit-identical at every device count
+        # (per-point keyed RNG draws), so the device count is execution
+        # placement, not semantics: points at different counts SHARE
+        # cache entries (pinned by tests/test_campaign_cache.py)
+        d = self.to_dict()
+        d.pop("devices", None)
+        return canonical_hash(d)
 
     def policy_obj(self) -> Policy:
         return policy_from_dict(dict(self.policy))
@@ -167,6 +179,7 @@ class Sweep:
     overrun_prob: float = 0.3
     library: str = "sim"
     engine: str = "event"                 # 'event' | 'vec' | 'jit'
+    devices: Optional[int] = None         # jit only: logical devices
 
     def __post_init__(self):
         names = [p.name for p in self.policies]
@@ -177,6 +190,15 @@ class Sweep:
         if self.engine not in ENGINES:
             raise ValueError(f"sweep {self.name!r}: unknown engine "
                              f"{self.engine!r}; want one of {ENGINES}")
+        if self.devices is not None:
+            if self.engine != "jit":
+                raise ValueError(
+                    f"sweep {self.name!r}: devices={self.devices} "
+                    f"requires engine='jit' (the {self.engine!r} "
+                    "engine runs on the host)")
+            if self.devices < 1:
+                raise ValueError(f"sweep {self.name!r}: devices="
+                                 f"{self.devices} must be >= 1")
 
     def points(self) -> List[SimPoint]:
         out = []
@@ -193,7 +215,8 @@ class Sweep:
                                 duration=self.duration, cf=self.cf,
                                 overrun_prob=self.overrun_prob,
                                 library=self.library,
-                                engine=self.engine))
+                                engine=self.engine,
+                                devices=self.devices))
         return out
 
     def to_dict(self) -> Dict[str, Any]:
@@ -203,6 +226,8 @@ class Sweep:
         d["v"] = SPEC_VERSION
         if self.engine == "event":        # keep pre-engine spec hashes
             d.pop("engine")
+        if self.devices is None:          # keep pre-sharding hashes
+            d.pop("devices")
         return d
 
     def spec_hash(self) -> str:

@@ -1,0 +1,176 @@
+"""Shared equivalence-test harness for the three simulation engines.
+
+One fixture family covers every cross-engine gate in the suite: an
+:class:`EngineCase` names a concrete backend configuration — engine,
+logical device count, dispatch chunk shape, interrupt-table width,
+demand profile — and :func:`run_case` executes any corpus under it,
+returning tidy metric rows.  The assertion helpers then express the
+three contracts the engines promise:
+
+* :func:`assert_bit_exact` — metrics equal row for row (the vec-vs-
+  event contract, the jit nominal-profile contract, and the sharded-
+  vs-single-device contract at *any* device count);
+* :func:`assert_statistical_close` — equal distributions, different
+  realizations (the jit sampled-profile contract vs event/vec);
+* :func:`assert_deterministic` — same case, same corpus, any batch
+  order: identical rows (the counter-based-RNG composition-
+  independence contract).
+
+``tests/test_simulator_vec.py``, ``tests/test_simulator_jit.py`` and
+``tests/test_device_sharding.py`` all parametrize over EngineCases
+instead of hand-rolling per-file runners, so a new backend knob (such
+as ``devices``) lands in every gate by adding one case.
+
+Compilation note: the jit engine compiles one lockstep ``while_loop``
+per (policy-config, batch-shape, table-width, device-count) tuple
+(seconds each); corpora here are deliberately shared — reuse
+:func:`fig8_corpus` / :func:`mixed_corpus` rather than inventing new
+shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.core import Policy, generate_taskset, simulate
+from repro.core.simulator_vec import simulate_vbatch
+from repro.experiments.metrics import metrics_row
+from repro.experiments.runner import cached_library
+
+LIB = cached_library("sim")
+
+# the two shared corpus shapes (see module docstring)
+MIXED_SIZES = (3, 10, 6, 13)
+
+
+def rows(ms) -> List[Dict[str, Any]]:
+    """Tidy metric rows — the comparable unit of every gate."""
+    return [metrics_row(m) for m in ms]
+
+
+@functools.lru_cache(maxsize=None)
+def mixed_corpus(sizes: Tuple[int, ...] = MIXED_SIZES, u: float = 0.9):
+    """Heterogeneous-``n_tasks`` batch (exercises taskset padding)."""
+    tasksets = [generate_taskset(u, seed=s, n_tasks=n, programs=LIB)
+                for s, n in enumerate(sizes)]
+    return tasksets, list(range(len(sizes)))
+
+
+@functools.lru_cache(maxsize=None)
+def fig8_corpus(utils: Tuple[float, ...] = (0.7, 0.9),
+                n_seeds: int = 16, n_tasks: int = 10):
+    """Homogeneous fig8-style batch (the perf-corpus shape)."""
+    tasksets, seeds = [], []
+    for u in utils:
+        for s in range(n_seeds):
+            tasksets.append(generate_taskset(u, seed=s, n_tasks=n_tasks,
+                                             programs=LIB))
+            seeds.append(s)
+    return tasksets, seeds
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineCase:
+    """One backend configuration under test.
+
+    ``devices`` is the logical-device shard count (jit only; ``None``
+    leaves the engine's own default).  ``chunk`` bounds the per-device
+    dispatch chunk via ``batch_size`` (small values force multi-span
+    dispatch and rectangle padding).  ``table_width`` pins the starting
+    interrupt-table width via ``REPRO_JIT_TABLE_WIDTH`` (small values
+    force the overflow-retry ladder).
+    """
+    name: str
+    engine: str = "jit"                  # "event" | "vec" | "jit"
+    devices: Optional[int] = None
+    chunk: Optional[int] = None
+    table_width: Optional[int] = None
+    demand_profile: str = "sampled"
+
+    def __str__(self) -> str:            # pytest id
+        return self.name
+
+
+def run_case(case: EngineCase, tasksets, seeds, policy, *,
+             duration: float, overrun_prob: float = 0.3,
+             cf: float = 2.0) -> List[Dict[str, Any]]:
+    """Execute the corpus under ``case`` and return metric rows."""
+    if case.engine == "event":
+        if case.demand_profile != "sampled":
+            raise ValueError("event engine has no demand_profile knob")
+        return rows(simulate(ts, LIB, policy, seed=s, duration=duration,
+                             overrun_prob=overrun_prob, cf=cf)
+                    for ts, s in zip(tasksets, seeds))
+    kw: Dict[str, Any] = dict(seeds=seeds, duration=duration,
+                              overrun_prob=overrun_prob, cf=cf,
+                              demand_profile=case.demand_profile)
+    if case.engine == "jit":
+        kw["select_backend"] = "jit"
+        kw["devices"] = case.devices
+        if case.chunk is not None:
+            kw["batch_size"] = case.chunk
+    elif case.engine != "vec":
+        raise ValueError(f"unknown EngineCase engine {case.engine!r}")
+    saved = os.environ.get("REPRO_JIT_TABLE_WIDTH")
+    try:
+        if case.table_width is not None:
+            os.environ["REPRO_JIT_TABLE_WIDTH"] = str(case.table_width)
+        return rows(simulate_vbatch(tasksets, LIB, policy, **kw))
+    finally:
+        if case.table_width is not None:
+            if saved is None:
+                os.environ.pop("REPRO_JIT_TABLE_WIDTH", None)
+            else:
+                os.environ["REPRO_JIT_TABLE_WIDTH"] = saved
+
+
+# ----------------------------------------------------------------------
+# The three contracts
+# ----------------------------------------------------------------------
+
+def assert_bit_exact(ref_rows, got_rows, context: str = "") -> None:
+    """Rows equal, exactly — reporting the first diverging point."""
+    assert len(ref_rows) == len(got_rows), \
+        f"{context}: {len(ref_rows)} vs {len(got_rows)} rows"
+    for i, (a, b) in enumerate(zip(ref_rows, got_rows)):
+        if a != b:
+            diff = sorted(k for k in set(a) | set(b)
+                          if a.get(k) != b.get(k))
+            raise AssertionError(
+                f"{context}: point {i} diverged in fields {diff}: "
+                f"{[(k, a.get(k), b.get(k)) for k in diff[:4]]}")
+
+
+def assert_statistical_close(ref_rows, got_rows, *,
+                             volume_tol: float = 0.06) -> None:
+    """Equal distributions: pooled success rates within the two-sided
+    binomial bound, volume metrics within ``volume_tol`` relative."""
+    from benchmarks.perf_sim import binomial_bound
+    n = len(ref_rows)
+    assert n == len(got_rows) and n > 0
+    for field in ("success_all", "success_hi"):
+        pa = sum(r[field] for r in ref_rows) / n
+        pb = sum(r[field] for r in got_rows) / n
+        bound = binomial_bound(0.5 * (pa + pb), n)
+        assert abs(pa - pb) <= bound, (field, pa, pb, bound)
+    for field in ("jobs_lo", "jobs_hi", "exec_cycles"):
+        sa = sum(r[field] for r in ref_rows)
+        sb = sum(r[field] for r in got_rows)
+        assert sa > 0
+        assert abs(sa - sb) / sa < volume_tol, (field, sa, sb)
+
+
+def assert_deterministic(case: EngineCase, tasksets, seeds, policy, *,
+                         duration: float, **kw) -> List[Dict[str, Any]]:
+    """Same case run twice, then in reversed batch order: identical
+    rows (per-point keyed RNG = batch-composition independence).
+    Returns the rows for further comparisons."""
+    a = run_case(case, tasksets, seeds, policy, duration=duration, **kw)
+    b = run_case(case, tasksets, seeds, policy, duration=duration, **kw)
+    assert_bit_exact(a, b, f"{case.name}: repeat run")
+    rev = run_case(case, list(tasksets)[::-1], list(seeds)[::-1], policy,
+                   duration=duration, **kw)
+    assert_bit_exact(a, rev[::-1], f"{case.name}: reversed batch")
+    return a

@@ -1,0 +1,225 @@
+"""Sharded-dispatch equivalence: ``sharded(N) == unsharded``, always.
+
+The sharded jit dispatcher (``core.simulator_jit``) promises that the
+logical-device count is a pure throughput knob: per-point keyed RNG
+draws make every point's result independent of which device, span, or
+rectangle padding executed it.  This suite pins that promise three
+ways:
+
+* property tests over the span planner (``_plan_spans``) — every
+  point covered exactly once, in order, padding only ever duplicates
+  a span's own last point;
+* hypothesis-driven (fallback-compatible) bit-exactness of the full
+  engine at device counts 1–4 on a mixed-``n_tasks`` corpus whose
+  size is coprime with every ``devices * chunk`` rectangle, so both
+  multi-span dispatch and pad points are always in play;
+* the cache contract — ``devices`` never reaches a point's content
+  hash (bit-identical results must share cache entries) and never
+  changes committed spec hashes.
+
+Plus the suite-floor meta check for the harness refactor: moving
+``test_simulator_vec.py`` / ``test_simulator_jit.py`` onto
+``tests/harness.py`` must never quietly drop tests.
+
+Compilation note: corpus shapes here are chosen so the whole file
+compiles ~6 distinct lockstep graphs (see EngineCase comments); keep
+new cases on the same ``(sizes, chunk)`` geometry.
+"""
+import functools
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from harness import (EngineCase, LIB, assert_bit_exact,
+                     assert_deterministic, mixed_corpus, run_case)
+from repro.core import Policy
+from repro.core import simulator_jit as sj
+from repro.core.simulator_jit import _plan_spans
+
+# 7 mixed-size points with chunk=4: uneven at every device count
+# (7 % 4, 7 % 8, 7 % 9, 7 % 8 rectangles all ragged), one shared
+# max-n_tasks so spans containing point 3 reuse one padded shape
+SIZES = (3, 10, 6, 13, 4, 8, 5)
+CHUNK = 4
+DURATION = 3e5
+
+
+def corpus(n=len(SIZES)):
+    tasksets, seeds = mixed_corpus(SIZES[:n])
+    return tasksets, seeds
+
+
+@functools.lru_cache(maxsize=None)
+def reference_rows(n=len(SIZES)):
+    """Unsharded (devices=1) jit rows — the bit-exactness baseline."""
+    ts, seeds = corpus(n)
+    return run_case(EngineCase("jit-d1", devices=1, chunk=CHUNK),
+                    ts, seeds, Policy.mesc(), duration=DURATION)
+
+
+class TestPlanSpans:
+    """The span planner, as pure properties (no compilation)."""
+
+    @settings(max_examples=60, deadline=None)
+    @given(n=st.integers(1, 400), chunk=st.integers(1, 64),
+           devices=st.integers(1, 8))
+    def test_cover_order_and_padding(self, n, chunk, devices):
+        spans = _plan_spans(n, chunk, devices)
+        covered = []
+        for idxs, real, d in spans:
+            assert 1 <= d <= devices
+            assert len(idxs) % d == 0          # equal shards
+            assert 1 <= real <= len(idxs)
+            covered.extend(idxs[:real])
+            # padding duplicates the span's own last real point only
+            assert idxs[real:] == [idxs[real - 1]] * (len(idxs) - real)
+        assert covered == list(range(n))       # exact cover, in order
+
+    @settings(max_examples=30, deadline=None)
+    @given(n=st.integers(1, 300), chunk=st.integers(1, 64))
+    def test_single_device_reproduces_legacy_plan(self, n, chunk):
+        """devices=1 must be the pre-sharding chunking exactly: full
+        chunks then one ragged tail padded up to the chunk size."""
+        spans = _plan_spans(n, chunk, 1)
+        assert all(d == 1 for _, _, d in spans)
+        assert [real for _, real, _ in spans] == \
+            [min(chunk, n - lo) for lo in range(0, n, chunk)]
+        # only the tail of a multi-span plan pads; the first span of a
+        # small batch shrinks to the batch instead
+        assert len(spans[0][0]) == min(chunk, n)
+        for idxs, real, _ in spans[1:]:
+            assert len(idxs) == chunk
+
+    def test_later_tails_keep_the_superchunk_shape(self):
+        # lo > 0 tails pad to the full devices x chunk rectangle so
+        # they reuse the superchunk compilation
+        spans = _plan_spans(17, 2, 3)          # 6 + 6 + 5
+        assert [(len(i), r, d) for i, r, d in spans] == \
+            [(6, 6, 3), (6, 6, 3), (6, 5, 3)]
+
+
+class TestShardedBitExactness:
+    """sharded(N) == sharded(1), bit for bit, sampled profile."""
+
+    @settings(max_examples=6, deadline=None)
+    @given(devices=st.integers(1, 4))
+    def test_any_device_count_matches_unsharded(self, devices):
+        ts, seeds = corpus()
+        got = run_case(EngineCase(f"jit-d{devices}", devices=devices,
+                                  chunk=CHUNK),
+                       ts, seeds, Policy.mesc(), duration=DURATION)
+        assert_bit_exact(reference_rows(), got,
+                         f"devices={devices} vs devices=1")
+
+    def test_pad_points_never_leak(self):
+        """n=5 on a devices=4 x chunk=2 rectangle: 3 of 8 simulated
+        lanes are padding — exactly 5 rows come back, each equal to
+        its unsharded self (a leaked pad row would misalign or
+        duplicate the tail)."""
+        ts, seeds = corpus(5)
+        got = run_case(EngineCase("jit-d4-pad", devices=4, chunk=2),
+                       ts, seeds, Policy.mesc(), duration=DURATION)
+        assert len(got) == 5
+        assert_bit_exact(reference_rows()[:5], got, "padded rectangle")
+
+    def test_sharded_composition_independence(self):
+        """Repeat and reversed-batch runs at devices=3: identical rows
+        (the keyed-RNG contract survives sharding)."""
+        ts, seeds = corpus()
+        a = assert_deterministic(
+            EngineCase("jit-d3", devices=3, chunk=CHUNK),
+            ts, seeds, Policy.mesc(), duration=DURATION)
+        assert_bit_exact(reference_rows(), a, "devices=3 vs devices=1")
+
+    def test_retry_ladder_stays_sharded_exact(self, monkeypatch):
+        """A tiny starting interrupt table forces overflow retries,
+        which deliberately run single-device — the merged result must
+        still equal the unsharded run's bit for bit."""
+        monkeypatch.setattr(sj, "_RETRY_BUCKET", 4)
+        ts, seeds = corpus()
+        kw = dict(duration=DURATION)
+        narrow1 = run_case(EngineCase("jit-d1-k2", devices=1,
+                                      chunk=CHUNK, table_width=2),
+                           ts, seeds, Policy.mesc(), **kw)
+        assert_bit_exact(reference_rows(), narrow1, "width ladder d=1")
+        narrow3 = run_case(EngineCase("jit-d3-k2", devices=3,
+                                      chunk=CHUNK, table_width=2),
+                           ts, seeds, Policy.mesc(), **kw)
+        assert_bit_exact(narrow1, narrow3, "width ladder d=3")
+
+    def test_retries_dispatch_single_device(self, monkeypatch):
+        """The ladder's devices handoff, pinned without compiles:
+        the first dispatch carries the span's device count, every
+        retry runs devices=1 (retry sub-batches are bucket-padded,
+        not rectangle-padded)."""
+        calls = []
+
+        def run_once(b, policy, seeds, duration, op, cf, nominal, K,
+                     devices=1):
+            calls.append((K, devices))
+            return {"overflow": [K <= sj._K0] * len(seeds),
+                    "seeds": list(seeds)}
+
+        monkeypatch.setattr(sj, "_run_once", run_once)
+        monkeypatch.setattr(
+            sj, "_assemble",
+            lambda b, final, duration: [None] * len(final["seeds"]))
+        monkeypatch.setattr(sj, "_RETRY_BUCKET", 4)
+        ts, seeds = corpus(6)
+        sj._run_chunk(ts, LIB, Policy.mesc(), seeds, DURATION, 0.3,
+                      2.0, "sampled", devices=3)
+        assert [d for _, d in calls] == [3, 1]
+        assert calls[1][0] == 2 * sj._K0
+
+
+class TestDevicesCacheNeutral:
+    """devices never reaches content hashes (results are identical)."""
+
+    def _point(self, devices):
+        from repro.experiments.spec import Sweep
+        return Sweep(name="t", policies=(Policy.mesc(),), n_sets=1,
+                     duration=1e6, engine="jit",
+                     devices=devices).points()[0]
+
+    def test_key_identical_across_device_counts(self):
+        keys = {self._point(d).key() for d in (None, 1, 4)}
+        assert len(keys) == 1
+
+    def test_to_dict_carries_devices_only_when_set(self):
+        assert "devices" not in self._point(None).to_dict()
+        d = self._point(4).to_dict()
+        assert d["devices"] == 4
+        from repro.experiments.spec import SimPoint
+        assert SimPoint.from_dict(d).devices == 4    # worker payload
+
+    def test_sweep_spec_hash_unchanged_when_unset(self):
+        from repro.experiments.spec import Sweep
+        plain = Sweep(name="t", policies=(Policy.mesc(),), n_sets=1,
+                      duration=1e6, engine="jit")
+        assert "devices" not in plain.to_dict()
+
+    def test_devices_requires_jit_engine(self):
+        from repro.experiments.spec import Sweep
+        with pytest.raises(ValueError, match="devices"):
+            Sweep(name="t", policies=(Policy.mesc(),), n_sets=1,
+                  duration=1e6, engine="vec", devices=2)
+        with pytest.raises(ValueError, match="devices"):
+            Sweep(name="t", policies=(Policy.mesc(),), n_sets=1,
+                  duration=1e6, engine="jit", devices=0)
+
+
+class TestSuiteFloor:
+    """The harness refactor must never quietly drop tests."""
+
+    # pre-refactor test-function counts of the two migrated modules
+    FLOORS = {"test_simulator_jit": 23, "test_simulator_vec": 19}
+
+    @pytest.mark.parametrize("module,floor", sorted(FLOORS.items()))
+    def test_migrated_module_keeps_its_tests(self, module, floor):
+        mod = __import__(module)
+        n = sum(1 for cls in vars(mod).values()
+                if isinstance(cls, type)
+                and cls.__name__.startswith("Test")
+                for name in vars(cls) if name.startswith("test_"))
+        assert n >= floor, \
+            f"{module} has {n} test functions, refactor floor {floor}"

@@ -7,61 +7,60 @@ draws exist there), and statistical equality on the sampled corpus
 (counter-based splitmix64 draws, same distributions, different
 realizations).  Also covers the overflow-retry ladder's bookkeeping,
 batch-composition independence, the deprecated ``"jax"`` alias, and
-the JAX-absent import guard.
+the JAX-absent import guard.  All cross-engine gates go through the
+shared :mod:`harness` EngineCase family, so the sharded variants in
+``tests/test_device_sharding.py`` are the same fixtures at another
+device count.
 
-Compilation note: each (policy-config, corpus-shape) pair compiles the
-whole lockstep while_loop once per process (~tens of seconds), so the
-tests below deliberately share two corpora — keep it that way when
-adding cases.
+Compilation note: each (policy-config, corpus-shape, device-count)
+tuple compiles the whole lockstep while_loop once per process (seconds
+each), so the tests below deliberately share the two harness corpora —
+keep it that way when adding cases.
 """
 import dataclasses
 import importlib
 import math
-import os
 import sys
 
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core import Policy, generate_taskset, simulate
+from harness import (EngineCase, LIB, assert_bit_exact,
+                     assert_deterministic, assert_statistical_close,
+                     fig8_corpus, mixed_corpus, rows, run_case)
+from repro.core import Policy, generate_taskset
 from repro.core import simulator_jit as sj
 from repro.core.simulator import AggSamples
 from repro.core.simulator_vec import simulate_vbatch
 from repro.experiments.metrics import metrics_row
-from repro.experiments.runner import cached_library
-
-LIB = cached_library("sim")
 
 # shared corpora (see module docstring): one homogeneous fig8-style
 # batch for the mesc tests, one mixed-size batch for the policy sweep
-SIZES = [3, 10, 6, 13]
-MIXED_TS = [generate_taskset(0.9, seed=s, n_tasks=n, programs=LIB)
-            for s, n in enumerate(SIZES)]
-MIXED_SEEDS = list(range(len(SIZES)))
+MIXED_TS, MIXED_SEEDS = mixed_corpus()
+FIG8_TS, FIG8_SEEDS = fig8_corpus()
 
-FIG8_TS, FIG8_SEEDS = [], []
-for u in (0.7, 0.9):
-    for s in range(16):
-        FIG8_TS.append(generate_taskset(u, seed=s, n_tasks=10,
-                                        programs=LIB))
-        FIG8_SEEDS.append(s)
-
-
-def rows(ms):
-    return [metrics_row(m) for m in ms]
+VEC_NOM = EngineCase("vec-nominal", engine="vec",
+                     demand_profile="nominal")
+JIT_NOM = EngineCase("jit-nominal", demand_profile="nominal")
+JIT = EngineCase("jit")
 
 
 class TestZeroJitterExactEquivalence:
-    """No in-loop draws on the nominal profile -> jit == vec exactly."""
+    """No in-loop draws on the nominal profile -> jit == vec exactly,
+    at any device count (the fixture family's sharded leg)."""
 
-    def test_mesc_fig8_corpus_exact(self):
-        a = simulate_vbatch(FIG8_TS, LIB, Policy.mesc(), seeds=FIG8_SEEDS,
-                            duration=2e6, demand_profile="nominal")
-        b = simulate_vbatch(FIG8_TS, LIB, Policy.mesc(), seeds=FIG8_SEEDS,
-                            duration=2e6, demand_profile="nominal",
-                            select_backend="jit")
-        assert rows(a) == rows(b)
+    @pytest.mark.parametrize("case", [
+        JIT_NOM,
+        EngineCase("jit-nominal-d2", demand_profile="nominal",
+                   devices=2),
+    ], ids=str)
+    def test_mesc_fig8_corpus_exact(self, case):
+        a = run_case(VEC_NOM, FIG8_TS, FIG8_SEEDS, Policy.mesc(),
+                     duration=2e6)
+        b = run_case(case, FIG8_TS, FIG8_SEEDS, Policy.mesc(),
+                     duration=2e6)
+        assert_bit_exact(a, b, case.name)
 
     @pytest.mark.parametrize("policy", [
         dataclasses.replace(Policy.mesc(use_banks=False), name="mesc-noB"),
@@ -71,12 +70,11 @@ class TestZeroJitterExactEquivalence:
     def test_policy_variants_mixed_sizes_exact(self, policy):
         """Bank-less save path, AMC drop + non-preemptive, operator
         boundaries — on one padded mixed-n_tasks batch."""
-        a = simulate_vbatch(MIXED_TS, LIB, policy, seeds=MIXED_SEEDS,
-                            duration=4e6, demand_profile="nominal")
-        b = simulate_vbatch(MIXED_TS, LIB, policy, seeds=MIXED_SEEDS,
-                            duration=4e6, demand_profile="nominal",
-                            select_backend="jit")
-        assert rows(a) == rows(b)
+        a = run_case(VEC_NOM, MIXED_TS, MIXED_SEEDS, policy,
+                     duration=4e6)
+        b = run_case(JIT_NOM, MIXED_TS, MIXED_SEEDS, policy,
+                     duration=4e6)
+        assert_bit_exact(a, b, policy.name)
 
     def test_nominal_vec_matches_event_nominal_semantics(self):
         """The nominal profile itself is engine-consistent: the NumPy
@@ -94,39 +92,17 @@ class TestStatisticalEquivalence:
     """Sampled profile: distributions equal, realizations differ."""
 
     def test_fig8_success_rates_within_ci(self):
-        from benchmarks.perf_sim import binomial_bound
-        v = simulate_vbatch(FIG8_TS, LIB, Policy.mesc(), seeds=FIG8_SEEDS,
-                            duration=2e7)
-        j = simulate_vbatch(FIG8_TS, LIB, Policy.mesc(), seeds=FIG8_SEEDS,
-                            duration=2e7, select_backend="jit")
-        rv, rj = rows(v), rows(j)
-        n = len(rv)
-        for field in ("success_all", "success_hi"):
-            pv = sum(r[field] for r in rv) / n
-            pj = sum(r[field] for r in rj) / n
-            bound = binomial_bound(0.5 * (pv + pj), n)
-            assert abs(pv - pj) <= bound, (field, pv, pj, bound)
-        # volume metrics agree to a few percent on the pooled corpus
-        for field in ("jobs_lo", "jobs_hi", "exec_cycles"):
-            sv = sum(r[field] for r in rv)
-            sj_ = sum(r[field] for r in rj)
-            assert sv > 0
-            assert abs(sv - sj_) / sv < 0.06, (field, sv, sj_)
+        v = run_case(EngineCase("vec", engine="vec"), FIG8_TS,
+                     FIG8_SEEDS, Policy.mesc(), duration=2e7)
+        j = run_case(JIT, FIG8_TS, FIG8_SEEDS, Policy.mesc(),
+                     duration=2e7)
+        assert_statistical_close(v, j)
 
     def test_deterministic_and_composition_independent(self):
         """Counter-based RNG: same point -> same result, regardless of
         run repetition or batch order."""
-        a = simulate_vbatch(FIG8_TS, LIB, Policy.mesc(),
-                            seeds=FIG8_SEEDS, duration=2e7,
-                            select_backend="jit")
-        b = simulate_vbatch(FIG8_TS, LIB, Policy.mesc(),
-                            seeds=FIG8_SEEDS, duration=2e7,
-                            select_backend="jit")
-        assert rows(a) == rows(b)
-        rev = simulate_vbatch(FIG8_TS[::-1], LIB, Policy.mesc(),
-                              seeds=FIG8_SEEDS[::-1], duration=2e7,
-                              select_backend="jit")
-        assert rows(rev)[::-1] == rows(a)
+        assert_deterministic(JIT, FIG8_TS, FIG8_SEEDS, Policy.mesc(),
+                             duration=2e7)
 
 
 class TestAggSamples:
@@ -169,12 +145,15 @@ class TestAggSamples:
 
 
 class TestOverflowRetryLadder:
-    """_run_chunk bookkeeping, with _run_once stubbed (no compiles)."""
+    """_run_chunk bookkeeping, with _run_once stubbed (no compiles).
+    The sharded handoff (first dispatch sharded, retries single-
+    device) is pinned in tests/test_device_sharding.py."""
 
     def test_selective_retry_merges_and_widens(self, monkeypatch):
         calls = []
 
-        def run_once(b, policy, seeds, duration, op, cf, nominal, K):
+        def run_once(b, policy, seeds, duration, op, cf, nominal, K,
+                     devices=1):
             # odd-seed points overflow the primary table width only
             calls.append((list(seeds), K))
             return {"overflow": np.array([K <= sj._K0 and s % 2 == 1
@@ -202,7 +181,8 @@ class TestOverflowRetryLadder:
         from a saturated table."""
         monkeypatch.setattr(
             sj, "_run_once",
-            lambda b, policy, seeds, duration, op, cf, nominal, K:
+            lambda b, policy, seeds, duration, op, cf, nominal, K,
+            devices=1:
             {"overflow": np.ones(b.P, bool), "seeds": list(seeds)})
         monkeypatch.setattr(
             sj, "_assemble", lambda b, final, duration: [None] * b.P)
@@ -233,23 +213,29 @@ class TestOverflowRetryLadder:
 
 
 class TestEnvKnobs:
-    """REPRO_JIT_* env overrides reject junk loudly (a bad value must
-    not crash with a bare int() traceback or silently misconfigure
-    the thread pool / retry ladder)."""
+    """REPRO_* env overrides reject junk loudly (a bad value must not
+    crash with a bare int() traceback or silently misconfigure the
+    device pool / retry ladder)."""
 
     @pytest.mark.parametrize("bad", ["abc", "1.5", "0", "-2", "2x"])
-    def test_streams_rejects_junk(self, monkeypatch, bad):
-        monkeypatch.setenv("REPRO_JIT_STREAMS", bad)
-        with pytest.raises(ValueError, match="REPRO_JIT_STREAMS"):
-            sj.default_streams()
+    def test_entry_point_rejects_junk_devices(self, monkeypatch, bad):
+        """The engine entry validates REPRO_DEVICES before any
+        dispatch (the knob's own suite is tests/test_device_config.py)
+        — a junk pool size must never start a campaign."""
+        monkeypatch.setenv("REPRO_DEVICES", bad)
+        with pytest.raises(ValueError, match="REPRO_DEVICES"):
+            simulate_vbatch(MIXED_TS[:1], LIB, Policy.mesc(), seeds=[0],
+                            duration=1e5, select_backend="jit")
 
-    def test_streams_accepts_valid_and_default(self, monkeypatch):
-        monkeypatch.setenv("REPRO_JIT_STREAMS", "3")
-        assert sj.default_streams() == 3
-        monkeypatch.delenv("REPRO_JIT_STREAMS")
-        assert sj.default_streams() >= 1
-        monkeypatch.setenv("REPRO_JIT_STREAMS", "")   # empty = unset
-        assert sj.default_streams() >= 1
+    def test_explicit_single_device_skips_env_default(self, monkeypatch):
+        """devices=1 is the no-sharding fast path: it must not consult
+        (or trip over) the env default at all."""
+        monkeypatch.setenv("REPRO_DEVICES", "junk")
+        out = simulate_vbatch(FIG8_TS[:1], LIB, Policy.mesc(),
+                              seeds=FIG8_SEEDS[:1], duration=2e6,
+                              demand_profile="nominal",
+                              select_backend="jit", devices=1)
+        assert len(out) == 1
 
     @pytest.mark.parametrize("var,fn", [
         ("REPRO_JIT_TABLE_WIDTH", sj._table_width),
@@ -290,37 +276,33 @@ class TestStaleInterruptPruning:
         ts = list(self.PROP_TS)
         ts[0] = generate_taskset(u, seed=seed, n_tasks=6, programs=LIB)
         seeds = [seed, 1, 2, 3]
-        ref = simulate_vbatch(ts, LIB, policy, seeds=seeds,
-                              duration=3e5, demand_profile="nominal")
+        ref = run_case(VEC_NOM, ts, seeds, policy, duration=3e5)
         old_bucket = sj._RETRY_BUCKET
-        os.environ["REPRO_JIT_TABLE_WIDTH"] = str(2 ** k0)
         sj._RETRY_BUCKET = 4
         try:
-            out = simulate_vbatch(ts, LIB, policy, seeds=seeds,
-                                  duration=3e5,
-                                  demand_profile="nominal",
-                                  select_backend="jit")
+            out = run_case(
+                EngineCase("jit-nominal-narrow",
+                           demand_profile="nominal",
+                           table_width=2 ** k0),
+                ts, seeds, policy, duration=3e5)
         finally:
             sj._RETRY_BUCKET = old_bucket
-            del os.environ["REPRO_JIT_TABLE_WIDTH"]
-        assert rows(ref) == rows(out)
+        assert_bit_exact(ref, out, "pruned jit vs unpruned vec")
 
     def test_prune_toggle_bit_identical(self):
         """Pruning removes only dead pops: the unpruned compiled graph
         produces bit-identical metrics (sampled profile, so demand
         draws and the full event mix are exercised)."""
-        a = simulate_vbatch(FIG8_TS[:16], LIB, Policy.mesc(),
-                            seeds=FIG8_SEEDS[:16], duration=2e6,
-                            select_backend="jit")
+        a = run_case(JIT, FIG8_TS[:16], FIG8_SEEDS[:16], Policy.mesc(),
+                     duration=2e6)
         assert sj._PRUNE_STALE is True
         sj._PRUNE_STALE = False
         try:
-            b = simulate_vbatch(FIG8_TS[:16], LIB, Policy.mesc(),
-                                seeds=FIG8_SEEDS[:16], duration=2e6,
-                                select_backend="jit")
+            b = run_case(JIT, FIG8_TS[:16], FIG8_SEEDS[:16],
+                         Policy.mesc(), duration=2e6)
         finally:
             sj._PRUNE_STALE = True
-        assert rows(a) == rows(b)
+        assert_bit_exact(a, b, "prune toggle")
 
     def test_kernel_count_reported(self):
         """The grouped-carry step's per-step kernel count is queryable
@@ -335,7 +317,7 @@ class TestStaleInterruptPruning:
 
 class TestPerfDeltaSchemaGuard:
     """print_delta vs an old-schema baseline: warn + skip, no KeyError
-    (regression: v1 entries lack the v2 per-engine layout)."""
+    (regression: v1 entries lack the per-engine layout)."""
 
     def test_v1_baseline_skipped_with_warning(self, capsys):
         import json
@@ -378,6 +360,11 @@ class TestBackendSelection:
             simulate_vbatch(MIXED_TS[:1], LIB, Policy.mesc(), seeds=[0],
                             duration=1e5, demand_profile="worst")
 
+    def test_devices_require_jit_backend(self):
+        with pytest.raises(ValueError, match="select_backend='jit'"):
+            simulate_vbatch(MIXED_TS[:1], LIB, Policy.mesc(), seeds=[0],
+                            duration=1e5, devices=2)
+
     def test_jax_alias_routes_to_jit(self):
         a = simulate_vbatch(FIG8_TS[:2], LIB, Policy.mesc(),
                             seeds=FIG8_SEEDS[:2], duration=2e6,
@@ -387,7 +374,7 @@ class TestBackendSelection:
                             seeds=FIG8_SEEDS[:2], duration=2e6,
                             demand_profile="nominal",
                             select_backend="jax")
-        assert rows(a) == rows(b)
+        assert_bit_exact(rows(a), rows(b), "jax alias")
 
     def test_mismatched_seed_count_raises(self):
         with pytest.raises(ValueError, match="tasksets vs"):
@@ -399,14 +386,45 @@ class TestPerfHarnessEquivalenceGate:
     """benchmarks.perf_sim's gating check on a micro corpus (reuses
     the shapes compiled above)."""
 
+    SPEC = dict(utils=(0.7, 0.9), n_sets=16, duration=2e6, n_tasks=10)
+
     def test_check_equivalence_micro(self):
         from benchmarks.perf_sim import check_equivalence
-        spec = dict(utils=(0.7, 0.9), n_sets=16, duration=2e6,
-                    n_tasks=10)
-        report = check_equivalence(spec)
+        report = check_equivalence(dict(self.SPEC))
         assert report["vec_mismatched_points"] == 0
         assert report["jit_nominal_mismatched_points"] == 0
         assert report["jit_statistical_ok"]
+        # devices defaulted to 1: the sharded gate reports skipped,
+        # never a vacuous pass
+        assert report["jit_devices"] == 1
+        assert report["sharded_exact_match_points"] is None
+
+    def test_check_equivalence_gates_sharded(self):
+        from benchmarks.perf_sim import check_equivalence
+        report = check_equivalence(dict(self.SPEC), devices=2)
+        assert report["jit_devices"] == 2
+        assert report["sharded_mismatched_points"] == 0
+        assert report["sharded_exact_match_points"] == 32
+
+    @pytest.mark.parametrize("empty", [dict(utils=(), n_sets=16),
+                                       dict(utils=(0.7,), n_sets=0)])
+    def test_empty_corpus_is_a_hard_error(self, empty):
+        """An empty comparison set would vacuously pass every gate —
+        the harness must die loudly, naming the section."""
+        from benchmarks.perf_sim import check_equivalence
+        spec = dict(self.SPEC, **empty)
+        with pytest.raises(SystemExit,
+                           match=r"corpus section 'smoke' is empty"):
+            check_equivalence(spec, section="smoke")
+
+    def test_partial_comparison_set_is_a_hard_error(self):
+        """A truncated engine result list silently weakens every
+        zip()-based gate — refuse it, naming set and section."""
+        from benchmarks.perf_sim import check_equivalence
+        with pytest.raises(SystemExit,
+                           match=r"set 'event' has 1 results"):
+            check_equivalence(dict(self.SPEC), section="full",
+                              results={"event": [object()]})
 
 
 # keep last: reloads simulator_jit, which clears its compilation cache

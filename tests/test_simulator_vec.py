@@ -3,12 +3,14 @@
 The vectorized SoA backend (`core.simulator_vec`) claims bit-exact
 per-run metrics against the event-driven engine — not "close", equal.
 These tests pin that contract across policies, taskset shapes, seeds
-and horizons (hypothesis-driven), pin the RNG identity the vectorized
-release path relies on, the cache-key contract that keeps the three
-engines' (event / vec / jit) campaign caches disjoint — including a
-committed byte-stability fixture — and the committed ``BENCH_sim.json``
-schema that CI's perf-smoke job diffs against.  The jit backend's own
-equivalence contract lives in ``tests/test_simulator_jit.py``.
+and horizons (hypothesis-driven) through the shared :mod:`harness`
+EngineCase family, pin the RNG identity the vectorized release path
+relies on, the cache-key contract that keeps the three engines'
+(event / vec / jit) campaign caches disjoint — including a committed
+byte-stability fixture — and the committed ``BENCH_sim.json`` schema
+that CI's perf-smoke job diffs against.  The jit backend's own
+equivalence contract lives in ``tests/test_simulator_jit.py``, the
+sharded-dispatch one in ``tests/test_device_sharding.py``.
 """
 import dataclasses
 import json
@@ -18,17 +20,19 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+from harness import (EngineCase, LIB, assert_bit_exact, mixed_corpus,
+                     run_case)
 from repro.core import Policy, generate_taskset, simulate
 from repro.core.simulator import simulate_batch
 from repro.core.simulator_vec import (VEC_SIM_SEMANTICS_VERSION, _VecBatch,
                                       simulate_vbatch)
 from repro.experiments.metrics import metrics_row
-from repro.experiments.runner import cached_library
 from repro.experiments.spec import SimPoint, Sweep
 
 REPO_ROOT = Path(__file__).resolve().parent.parent
 
-LIB = cached_library("sim")
+EVENT = EngineCase("event", engine="event")
+VEC = EngineCase("vec", engine="vec")
 
 POLICIES = [Policy.mesc(), Policy.non_preemptive(), Policy.amc(),
             dataclasses.replace(Policy.mesc(use_banks=False),
@@ -38,10 +42,10 @@ POLICIES = [Policy.mesc(), Policy.non_preemptive(), Policy.amc(),
 
 
 def both_engines(tasksets, seeds, policy, **kw):
-    ev = [simulate(ts, LIB, policy, seed=s, **kw)
-          for ts, s in zip(tasksets, seeds)]
-    vc = simulate_vbatch(tasksets, LIB, policy, seeds=seeds, **kw)
-    return ev, vc
+    """Event- and vec-engine rows for one corpus (the exactness gate's
+    two sides, as harness cases)."""
+    return (run_case(EVENT, tasksets, seeds, policy, **kw),
+            run_case(VEC, tasksets, seeds, policy, **kw))
 
 
 class TestGoldenCorpusEquivalence:
@@ -56,17 +60,17 @@ class TestGoldenCorpusEquivalence:
                     u, seed=s, n_tasks=6, programs=LIB))
                 seeds.append(s)
         ev, vc = both_engines(tasksets, seeds, policy, duration=6e6)
-        for i, (a, b) in enumerate(zip(ev, vc)):
-            assert metrics_row(a) == metrics_row(b), \
-                f"{policy.name} point {i} diverged"
+        assert_bit_exact(ev, vc, policy.name)
 
     def test_per_event_lists_exact(self):
         """Not just aggregates: the raw per-event metric lists (blocking
         intervals, save/restore breakdowns) match element for element."""
         tasksets = [generate_taskset(0.9, seed=s, n_tasks=8, programs=LIB)
                     for s in range(3)]
-        ev, vc = both_engines(tasksets, [0, 1, 2], Policy.mesc(),
-                              duration=2e7)
+        ev = [simulate(ts, LIB, Policy.mesc(), seed=s, duration=2e7)
+              for ts, s in zip(tasksets, [0, 1, 2])]
+        vc = simulate_vbatch(tasksets, LIB, Policy.mesc(),
+                             seeds=[0, 1, 2], duration=2e7)
         for a, b in zip(ev, vc):
             assert a.pi_blocking == b.pi_blocking
             assert a.ci_blocking == b.ci_blocking
@@ -78,13 +82,10 @@ class TestGoldenCorpusEquivalence:
 
     def test_mixed_taskset_sizes_one_batch(self):
         """Padding: one lockstep batch with heterogeneous n_tasks."""
-        sizes = [3, 10, 6, 13]
-        tasksets = [generate_taskset(0.8, seed=s, n_tasks=n, programs=LIB)
-                    for s, n in enumerate(sizes)]
-        ev, vc = both_engines(tasksets, list(range(len(sizes))),
-                              Policy.mesc(), duration=8e6)
-        for a, b in zip(ev, vc):
-            assert metrics_row(a) == metrics_row(b)
+        tasksets, seeds = mixed_corpus(u=0.8)
+        ev, vc = both_engines(tasksets, seeds, Policy.mesc(),
+                              duration=8e6)
+        assert_bit_exact(ev, vc, "mixed sizes")
 
     def test_matches_simulate_batch(self):
         """Drop-in for the serial batch entry point."""
@@ -107,11 +108,9 @@ class TestGoldenCorpusEquivalence:
         policy = POLICIES[pol_idx]
         tasks = generate_taskset(u, gamma=gamma, n_tasks=n_tasks, cf=cf,
                                  seed=seed, programs=LIB)
-        ev = simulate(tasks, LIB, policy, duration=4e6, seed=seed,
-                      overrun_prob=overrun, cf=cf)
-        vc = simulate_vbatch([tasks], LIB, policy, seeds=[seed],
-                             duration=4e6, overrun_prob=overrun, cf=cf)[0]
-        assert metrics_row(ev) == metrics_row(vc)
+        ev, vc = both_engines([tasks], [seed], policy, duration=4e6,
+                              overrun_prob=overrun, cf=cf)
+        assert_bit_exact(ev, vc, f"random point seed={seed}")
 
 
 class TestEngineInternals:
@@ -150,7 +149,6 @@ class TestEngineInternals:
         run, each point's RNG stream sits exactly where the phase
         draws left it."""
         tasks = generate_taskset(0.7, seed=1, n_tasks=4, programs=LIB)
-        from repro.core.simulator_vec import _VecBatch
         batch = _VecBatch([tasks], LIB, Policy.mesc(), seeds=[1],
                           duration=1e6, overrun_prob=0.3, cf=2.0,
                           demand_profile="nominal")
@@ -163,7 +161,6 @@ class TestEngineInternals:
     def test_nominal_demand_is_c_lo(self):
         """Zero-jitter profile: every accepted job's demand is exactly
         its C_LO budget."""
-        from repro.core.simulator_vec import _VecBatch
         tasks = generate_taskset(0.8, seed=2, n_tasks=6, programs=LIB)
         batch = _VecBatch([tasks], LIB, Policy.mesc(), seeds=[2],
                           duration=5e5, overrun_prob=0.3, cf=2.0,
@@ -176,7 +173,9 @@ class TestEngineInternals:
 
 
 class TestCacheContract:
-    """Vec/jit points are salted; event points keep pre-change keys."""
+    """Vec/jit points are salted; event points keep pre-change keys.
+    The devices knob's cache-neutrality (bit-identical results share
+    entries) is pinned in tests/test_device_sharding.py."""
 
     def _point(self, engine):
         sweep = Sweep(name="t", policies=(Policy.mesc(),), n_sets=1,
@@ -264,7 +263,7 @@ class TestBenchBaseline:
 
     def test_committed_baseline_schema(self):
         doc = json.loads((REPO_ROOT / "BENCH_sim.json").read_text())
-        assert doc["schema_version"] == 2
+        assert doc["schema_version"] == 3
         full = doc["sections"]["full"]
         assert full["corpus"]["points"] == 512
         assert full["corpus"]["style"] == "fig8"
@@ -281,6 +280,24 @@ class TestBenchBaseline:
         assert eq["vec_mismatched_points"] == 0
         assert eq["jit_nominal_mismatched_points"] == 0
         assert eq["jit_statistical_ok"] is True
+
+    def test_committed_baseline_device_scaling(self):
+        """Schema v3: the jit engine carries per-device-count scaling
+        rows, and every non-skipped row was asserted bit-exact against
+        devices=1 in the recording process — a committed throughput
+        number can never come from divergent work."""
+        from benchmarks.perf_sim import DEVICE_COUNTS
+        doc = json.loads((REPO_ROOT / "BENCH_sim.json").read_text())
+        scaling = doc["sections"]["full"]["engines"]["jit"][
+            "device_scaling"]
+        assert set(scaling) == {str(d) for d in DEVICE_COUNTS}
+        assert "1" in scaling                 # the reference leg
+        for d, row in scaling.items():
+            if "skipped" in row:
+                assert "logical devices" in row["skipped"]
+                continue
+            assert row["points_per_sec"] > 0
+            assert row["bit_exact_vs_devices1"] is True
 
     def test_perf_harness_stats_and_delta(self, capsys):
         """Harness internals: median-of-N stats, same-schema deltas,
