@@ -51,7 +51,7 @@ def main() -> None:
                     help="paper-scale experiment sizes (1000 task sets)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset (fig2,fig6,fig7,fig8,"
-                         "fig9,fig10,fig11,overhead,roofline)")
+                         "fig9,fig10,fig11,fig12,overhead,roofline)")
     ap.add_argument("--workers", type=int, default=None,
                     help="worker processes per campaign "
                          "(default: CPU count / $REPRO_WORKERS)")
@@ -85,7 +85,7 @@ def main() -> None:
     from benchmarks import (fig2_instruction_costs, fig6_banks,
                             fig7_blocking, fig8_success, fig9_hi_success,
                             fig10_survivability, fig11_multiacc,
-                            tbl_overhead, roofline)
+                            fig12_serving_slo, tbl_overhead, roofline)
     table = {
         "fig2": fig2_instruction_costs.main,
         "fig6": fig6_banks.main,
@@ -94,6 +94,7 @@ def main() -> None:
         "fig9": fig9_hi_success.main,
         "fig10": fig10_survivability.main,
         "fig11": fig11_multiacc.main,
+        "fig12": fig12_serving_slo.main,
         "overhead": tbl_overhead.main,
         "roofline": roofline.main,
     }

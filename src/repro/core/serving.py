@@ -10,7 +10,15 @@ Mapping (the TPU adaptation of SS IV/V, see docs/design.md):
   * context save / restore   = moving a request's cache pytree to/from host
                                DRAM (step_wise_mvout/mvin analogue)
   * config-copy buffer       = the request's generation config + position
-  * task monitor             = wall-clock LO-budget timers -> mode switch
+  * task monitor             = LO-budget timers -> mode switch
+
+Every timestamp (``submitted_at``, ``started_at``, ``exec_s``
+accumulation, LO-budget checks) is read through an injected *clock* — a
+zero-arg callable returning seconds.  The default is the wall clock
+(``time.monotonic``); under test and in the fig12 traffic harness a
+``repro.serving.clock.VirtualClock`` makes LO-budget overruns, mode
+switches and all SLO metrics deterministic (see docs/serving.md for
+the clock-injection contract).
 
 Scheduling follows scheduler.Policy + mode rules: HI requests preempt LO
 requests at instruction (= decode-step) boundaries; LO requests are never
@@ -27,7 +35,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -56,7 +64,9 @@ class Request:
     started_at: Optional[float] = None
     exec_s: float = 0.0
     first_token_at: Optional[float] = None
-    submitted_at: float = 0.0
+    # stamped by submit() from the server clock unless the caller (the
+    # admission front door) already set the true arrival time
+    submitted_at: Optional[float] = None
     finished_at: Optional[float] = None
     preemptions: int = 0
     saves: int = 0
@@ -113,7 +123,9 @@ class MESCServer:
                  rc: RuntimeConfig = CPU_RC, max_len: int = 64,
                  resident_slots: int = 2,
                  arena: Optional[KVSlotArena] = None, lane: int = 0,
-                 jit_fns=None):
+                 jit_fns=None,
+                 clock: Callable[[], float] = time.monotonic,
+                 cs_costs: Optional[Tuple[float, float]] = None):
         self.cfg = cfg
         self.params = params
         self.rc = rc
@@ -124,6 +136,10 @@ class MESCServer:
         self.mode = Mode.LO
         self.requests: Dict[int, Request] = {}
         self.current: Optional[int] = None
+        # the clock-injection contract (docs/serving.md): EVERY
+        # timestamp below reads self.clock(), never time.monotonic()
+        self.clock = clock
+        self._cs_save_s, self._cs_restore_s = cs_costs or (0.0, 0.0)
         if jit_fns is not None:            # shared across lanes
             self._decode, self._prefill = jit_fns
         else:
@@ -131,6 +147,14 @@ class MESCServer:
                 lambda p, t, c: lm.decode_step(cfg, p, t, c, rc))
             self._prefill = jax.jit(
                 lambda p, b: lm.prefill(cfg, p, b, rc, max_len=max_len))
+
+    def _charge(self, dt: float) -> None:
+        """Charge a modeled context-switch cost to an advanceable
+        (virtual) clock; a wall clock pays real save/restore latency
+        through the jax transfers themselves, so this is a no-op."""
+        adv = getattr(self.clock, "advance", None)
+        if adv is not None and dt:
+            adv(dt)
 
     # -- bank pool ----------------------------------------------------------
     def _resident(self) -> List[Request]:
@@ -141,6 +165,7 @@ class MESCServer:
         victim.cache = jax.device_get(victim.cache)       # step_wise_mvout
         victim.resident = False
         victim.saves += 1
+        self._charge(self._cs_save_s)
         self.arena.release(self.lane, victim.rid)
 
     def _make_room(self, incoming: Request):
@@ -159,11 +184,13 @@ class MESCServer:
                 self.params, {"tokens": jnp.asarray(r.prompt[None])})
         elif not r.resident:
             r.cache = jax.device_put(r.cache)             # step_wise_mvin
+            self._charge(self._cs_restore_s)
         r.resident = True
 
     # -- scheduling ---------------------------------------------------------
     def submit(self, r: Request):
-        r.submitted_at = time.monotonic()
+        if r.submitted_at is None:         # front door may pre-stamp the
+            r.submitted_at = self.clock()  # true arrival time
         self.requests[r.rid] = r
 
     def _eligible(self) -> List[Request]:
@@ -188,14 +215,33 @@ class MESCServer:
             return min(live, key=lambda r: r.priority) if live else None
         return min(el, key=lambda r: r.priority)
 
+    def eligible_order(self) -> List[Request]:
+        """The lane's service order right now: eligible requests sorted
+        the way successive ``_pick`` calls would drain them (priority,
+        rid tiebreak), with a non-preemptive owner pinned first.  Used
+        by the admission-invariant property tests — with the workload
+        convention HI priorities < LO priorities, no LO request may
+        ever precede a HI request here."""
+        el = sorted(self._eligible(), key=lambda r: (r.priority, r.rid))
+        if self.policy.preemption == "none" and self.current is not None:
+            cur = self.requests.get(self.current)
+            if cur is not None and not cur.done:
+                el = [cur] + [r for r in el if r.rid != cur.rid]
+        return el
+
     def _mode_tick(self):
         live = [r for r in self.requests.values() if not r.done]
         if not live:
             self.mode = Mode.LO            # idle -> revert
             return
         for r in live:                     # monitor: LO-budget timers
-            if (r.crit == Crit.HI and r.exec_s > r.lo_budget_s
-                    and self.mode == Mode.LO):
+            # ANY request overrunning its LO-criticality budget trips
+            # the switch: an overrunning HI request needs its HI budget
+            # (the paper's rule), and an overrunning LO request is
+            # demoted to run only when no HI request is active
+            # (imprecise-MCS stance; regression-tested at a
+            # deterministic virtual time in tests/test_serving.py)
+            if r.exec_s > r.lo_budget_s and self.mode == Mode.LO:
                 self.mode = Mode.HI        # (transition is instantaneous
                                            #  here: saves are synchronous)
 
@@ -221,21 +267,21 @@ class MESCServer:
             self._make_room(r)
             self._restore(r)
         if r.started_at is None:
-            r.started_at = time.monotonic()
-        t0 = time.monotonic()
+            r.started_at = self.clock()
+        t0 = self.clock()
         last = (r.generated[-1] if r.generated else int(r.prompt[-1]))
         logits, r.cache = self._decode(self.params,
                                        jnp.asarray([last], jnp.int32),
                                        r.cache)
         tok = int(jnp.argmax(logits[0]))
         r.generated.append(tok)
-        r.exec_s += time.monotonic() - t0
+        r.exec_s += self.clock() - t0
         if r.first_token_at is None:
-            r.first_token_at = time.monotonic()
+            r.first_token_at = self.clock()
         if len(r.generated) >= r.max_new_tokens \
                 or int(r.cache["pos"]) >= self.max_len - 1:
             r.done = True
-            r.finished_at = time.monotonic()
+            r.finished_at = self.clock()
             r.resident = False
             r.cache = None                 # flush banks
             self.arena.release(self.lane, r.rid)
@@ -274,19 +320,45 @@ class MultiLaneServer:
     def __init__(self, cfg: ArchConfig, params, *, n_lanes: int = 2,
                  policy: Policy = None, rc: RuntimeConfig = CPU_RC,
                  max_len: int = 64, total_slots: Optional[int] = None,
-                 heuristic: str = "crit_aware"):
+                 heuristic: str = "crit_aware", jit_fns=None,
+                 clocks: Optional[Sequence[Callable[[], float]]] = None,
+                 cs_costs: Optional[Tuple[float, float]] = None):
         from repro.core.platform import HEURISTICS
         if heuristic not in HEURISTICS:
             raise ValueError(f"unknown heuristic {heuristic!r}")
         total_slots = total_slots if total_slots is not None else 2 * n_lanes
         self.arena = KVSlotArena(total_slots, n_lanes)
         self.heuristic = heuristic
-        decode = jax.jit(lambda p, t, c: lm.decode_step(cfg, p, t, c, rc))
-        prefill = jax.jit(
-            lambda p, b: lm.prefill(cfg, p, b, rc, max_len=max_len))
+        # dispatch functions: one shared jitted pair by default; the
+        # virtual-clock harness injects per-lane (decode, prefill)
+        # pairs instead (each bound to its own lane clock)
+        if jit_fns is None:
+            decode = jax.jit(
+                lambda p, t, c: lm.decode_step(cfg, p, t, c, rc))
+            prefill = jax.jit(
+                lambda p, b: lm.prefill(cfg, p, b, rc, max_len=max_len))
+            per_lane_fns = [(decode, prefill)] * n_lanes
+        elif callable(jit_fns[0]):                     # one shared pair
+            per_lane_fns = [tuple(jit_fns)] * n_lanes
+        else:                                          # per-lane pairs
+            if len(jit_fns) != n_lanes:
+                raise ValueError(f"got {len(jit_fns)} jit_fns pairs "
+                                 f"for {n_lanes} lanes")
+            per_lane_fns = [tuple(fns) for fns in jit_fns]
+        if clocks is None:
+            per_lane_clocks: List[Callable[[], float]] = \
+                [time.monotonic] * n_lanes
+        elif callable(clocks):                         # one shared clock
+            per_lane_clocks = [clocks] * n_lanes
+        else:
+            if len(clocks) != n_lanes:
+                raise ValueError(f"got {len(clocks)} clocks for "
+                                 f"{n_lanes} lanes")
+            per_lane_clocks = list(clocks)
         self.lanes: List[MESCServer] = [
             MESCServer(cfg, params, policy=policy, rc=rc, max_len=max_len,
-                       arena=self.arena, lane=i, jit_fns=(decode, prefill))
+                       arena=self.arena, lane=i, jit_fns=per_lane_fns[i],
+                       clock=per_lane_clocks[i], cs_costs=cs_costs)
             for i in range(n_lanes)]
         self.lane_of: Dict[int, int] = {}
 

@@ -8,22 +8,45 @@ against a non-preemptive (FIFO/run-to-completion) baseline.  With
 dispatch lanes sharing one KV-slot arena (``core.serving.MultiLaneServer``,
 see docs/scheduling.md).
 
+``--arrivals`` switches from the legacy batch drive to the open-loop
+traffic layer (``repro.serving``): requests arrive per a CRN arrival
+process (poisson / heavy_tail / diurnal / a replayed ``--trace`` file)
+through the admission front door, and the run is summarized as SLO
+metrics (``docs/serving.md``).  Add ``--virtual`` to run the whole
+thing on the deterministic virtual clock + service model (no model
+weights, byte-reproducible — the fig12 path); without it the real
+model serves the trace in wall-clock time.
+
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b-smoke
   PYTHONPATH=src python -m repro.launch.serve --lanes 2 --heuristic crit_aware
+  PYTHONPATH=src python -m repro.launch.serve --arrivals poisson --virtual
+  PYTHONPATH=src python -m repro.launch.serve --arrivals trace --trace t.json
 """
 from __future__ import annotations
 
 import argparse
+import time
+from collections import deque
 
-import jax
 import numpy as np
 
-from repro.configs import get_config
 from repro.core.scheduler import Policy
 from repro.core.serving import MESCServer, MultiLaneServer, Request
 from repro.core.task import Crit
-from repro.models import lm
-from repro.models.common import CPU_RC
+from repro.serving import (FrontDoor, PROCESS_KINDS, build_workload,
+                           make_process, run_virtual_serving, slo_summary)
+
+
+def _load_model(arch: str):
+    """Real-model setup, imported lazily so ``--virtual`` runs stay
+    free of jax/model-weight start-up cost."""
+    import jax
+    from repro.configs import get_config
+    from repro.models import lm
+    from repro.models.common import CPU_RC
+    cfg = get_config(arch)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0), CPU_RC)
+    return cfg, params
 
 
 def make_requests(cfg, rng, n_lo: int = 4, n_hi: int = 2,
@@ -88,6 +111,98 @@ def summarize(name, reqs):
     return out
 
 
+def run_traffic_real(cfg, params, policy, workload, *, lanes: int = 1,
+                     heuristic: str = "crit_aware",
+                     max_live_lo=None, prompt_len: int = 8):
+    """Open-loop wall-clock drive: the real model serves a CRN arrival
+    realization in real time through the admission front door."""
+    if lanes > 1:
+        srv = MultiLaneServer(cfg, params, policy=policy, max_len=64,
+                              n_lanes=lanes, heuristic=heuristic)
+    else:
+        srv = MESCServer(cfg, params, policy=policy, max_len=64)
+    warm = Request(rid=-1, priority=99, prompt=np.zeros(8, np.int32),
+                   max_new_tokens=2, crit=Crit.LO)
+    srv.submit(warm)
+    srv.run()
+    for ln in getattr(srv, "lanes", [srv]):
+        ln.requests.clear()
+
+    rng = np.random.default_rng(0)
+    t0 = time.monotonic()
+
+    def make_real(spec):
+        # pre-stamp the true arrival instant so front-door queueing is
+        # inside measured latency (same contract as the virtual path)
+        return Request(rid=spec.rid, priority=spec.priority,
+                       prompt=rng.integers(0, cfg.vocab, prompt_len,
+                                           dtype=np.int32),
+                       max_new_tokens=spec.max_new_tokens,
+                       crit=spec.crit, lo_budget_s=spec.lo_budget_s,
+                       submitted_at=t0 + spec.t)
+
+    front = FrontDoor(srv, max_live_lo=max_live_lo,
+                      make_request_fn=make_real)
+    pending = deque(sorted(workload, key=lambda s: (s.t, s.rid)))
+    while pending or front.queued or front.live():
+        now = time.monotonic() - t0
+        while pending and pending[0].t <= now:
+            front.arrive(pending.popleft())
+        front.pump()
+        if front.live():
+            srv.step()
+        elif pending:                      # idle: sleep to next arrival
+            time.sleep(max(0.0, min(pending[0].t - now, 0.05)))
+    front.check_conservation()
+    return srv.requests
+
+
+def print_slo(name, row):
+    def f(v, scale=1e3, unit="ms"):
+        return "   n/a" if v is None else f"{v * scale:7.1f} {unit}"
+    print(f"  {name:6s} HI: p50={f(row['hi_p50_latency_s'])} "
+          f"p99={f(row['hi_p99_latency_s'])} "
+          f"miss={row['hi_miss_rate'] if row['hi_miss_rate'] is not None else 'n/a'}  "
+          f"LO: p50={f(row['lo_p50_latency_s'])}  "
+          f"goodput={row['goodput_rps']:.2f} rps")
+
+
+def main_traffic(args):
+    """--arrivals != batch: the open-loop traffic front end."""
+    lo_process = make_process(args.arrivals, args.rate,
+                              trace_path=args.trace)
+    hi_process = make_process("poisson", args.hi_rate)
+    workload = build_workload(seed=args.seed, lo_process=lo_process,
+                              hi_process=hi_process, n_lo=args.n_lo,
+                              n_hi=args.n_hi, lo_tokens=args.lo_tokens,
+                              hi_tokens=args.hi_tokens)
+    mode = "virtual clock" if args.virtual else "wall clock"
+    print(f"open-loop {args.arrivals} arrivals ({mode}, "
+          f"lanes={args.lanes}, n_lo={args.n_lo}, n_hi={args.n_hi}, "
+          f"lo_rate={args.rate}/s, hi_rate={args.hi_rate}/s)")
+    if not args.virtual:
+        cfg, params = _load_model(args.arch)
+    rows = {}
+    for name, policy in (("mesc", Policy.mesc()),
+                         ("np", Policy.non_preemptive())):
+        if args.virtual:
+            reqs = run_virtual_serving(
+                workload, lanes=args.lanes, policy=policy,
+                seed=args.seed, heuristic=args.heuristic,
+                max_live_lo=args.max_live_lo)
+        else:
+            reqs = run_traffic_real(
+                cfg, params, policy, workload, lanes=args.lanes,
+                heuristic=args.heuristic, max_live_lo=args.max_live_lo)
+        rows[name] = slo_summary(reqs.values(),
+                                 hi_deadline_s=args.hi_deadline)
+        print_slo(name, rows[name])
+    m, b = rows["mesc"], rows["np"]
+    if m["hi_p99_latency_s"] and b["hi_p99_latency_s"]:
+        print(f"HI p99 latency np/mesc: "
+              f"{b['hi_p99_latency_s'] / m['hi_p99_latency_s']:.1f}x")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinyllama-1.1b-smoke")
@@ -97,11 +212,39 @@ def main():
     ap.add_argument("--heuristic", default="crit_aware",
                     choices=("first_fit", "worst_fit", "crit_aware"),
                     help="request -> lane partition heuristic")
+    ap.add_argument("--arrivals", default="batch",
+                    choices=("batch",) + PROCESS_KINDS,
+                    help="batch = legacy closed-batch drive; anything "
+                         "else selects the open-loop traffic layer")
+    ap.add_argument("--trace", default=None,
+                    help="arrival-trace JSON for --arrivals trace "
+                         "(see repro.serving.save_trace)")
+    ap.add_argument("--rate", type=float, default=2.0,
+                    help="LO arrival rate, requests/s")
+    ap.add_argument("--hi-rate", type=float, default=0.5,
+                    help="HI arrival rate, requests/s")
+    ap.add_argument("--n-lo", type=int, default=16)
+    ap.add_argument("--n-hi", type=int, default=6)
+    ap.add_argument("--lo-tokens", type=int, default=24)
+    ap.add_argument("--hi-tokens", type=int, default=6)
+    ap.add_argument("--hi-deadline", type=float, default=0.5,
+                    help="HI deadline for miss-rate accounting, seconds")
+    ap.add_argument("--max-live-lo", type=int, default=None,
+                    help="admission cap on concurrently-live LO "
+                         "requests (None = open throttle)")
+    ap.add_argument("--virtual", action="store_true",
+                    help="serve on the deterministic virtual clock + "
+                         "service model (no weights; byte-reproducible)")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
-    cfg = get_config(args.arch)
-    params = lm.init_params(cfg, jax.random.PRNGKey(0), CPU_RC)
-    rng = np.random.default_rng(0)
+    if args.arrivals == "trace" and not args.trace:
+        ap.error("--arrivals trace requires --trace PATH")
+    if args.arrivals != "batch":
+        main_traffic(args)
+        return
 
+    cfg, params = _load_model(args.arch)
+    rng = np.random.default_rng(0)
     lane_kw = dict(lanes=args.lanes, heuristic=args.heuristic)
     print(f"MESC (instruction-level preemption, lanes={args.lanes}):")
     mesc = summarize("mesc", run(cfg, params, Policy.mesc(),

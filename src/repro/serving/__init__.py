@@ -1,0 +1,44 @@
+"""Trace-driven serving front-end: open-loop traffic, admission
+control, and SLO accounting over the MESC serving stack (fig12).
+
+The package restates the paper's inversion-resolution claim as what it
+is in production terms — a tail-latency SLO result under load:
+
+  * :mod:`repro.serving.traffic` — arrival-process generators
+    (Poisson, diurnal, bursty/heavy-tail, trace replay) built on the
+    repo's counter-based splitmix64 CRN idiom keyed
+    ``(seed, stream, arrival_index)`` — no host RNG, so traffic is
+    byte-reproducible and comparable across policies under common
+    random numbers;
+  * :mod:`repro.serving.frontend` — the admission-control front door
+    (HI queue drains before LO, optional LO live-cap) feeding
+    ``core.serving.MultiLaneServer``, plus the virtual-clock /
+    virtual-service-time harness that makes serving behaviour
+    deterministic and CI-gateable;
+  * :mod:`repro.serving.slo` — per-request SLO metrics (p50/p99/p999
+    latency and TTFT, deadline-miss rate under overload, goodput at
+    saturation);
+  * :mod:`repro.serving.fig12` — the campaign-engine point function
+    behind ``benchmarks/fig12_serving_slo.py``.
+
+See ``docs/serving.md`` for the layer contract and fig12 reading.
+"""
+from repro.serving.clock import VirtualClock, wall_clock
+from repro.serving.traffic import (PROCESS_KINDS, ArrivalSpec, Diurnal,
+                                   HeavyTail, Poisson, Trace,
+                                   arrival_times, build_workload,
+                                   crn_u01, load_trace, make_process,
+                                   save_trace)
+from repro.serving.slo import nearest_rank, slo_summary
+from repro.serving.frontend import (FrontDoor, VirtualModel,
+                                    make_request, run_virtual_serving)
+
+__all__ = [
+    "VirtualClock", "wall_clock",
+    "PROCESS_KINDS", "ArrivalSpec", "Poisson", "Diurnal", "HeavyTail",
+    "Trace",
+    "arrival_times", "build_workload", "crn_u01", "make_process",
+    "save_trace", "load_trace",
+    "nearest_rank", "slo_summary",
+    "FrontDoor", "VirtualModel", "make_request", "run_virtual_serving",
+]

@@ -1,0 +1,69 @@
+"""Injectable clocks for the serving stack (the clock-injection
+contract, see ``docs/serving.md``).
+
+A *clock* is any zero-arg callable returning seconds as a float.
+``core.serving.MESCServer`` reads every timestamp (``submitted_at``,
+``started_at``, ``exec_s`` accumulation, LO-budget mode-switch checks)
+through its injected clock, so the same scheduling code runs in two
+regimes:
+
+  * **wall clock** (:func:`wall_clock`, the default) — real serving:
+    timestamps are ``time.monotonic()`` and service time is whatever
+    the jitted dispatch actually costs;
+  * **virtual clock** (:class:`VirtualClock`) — deterministic replay:
+    time only moves when a model (``frontend.VirtualModel``) or the
+    context-switch cost hooks explicitly :meth:`~VirtualClock.advance`
+    it, so LO-budget timers, mode switches and every SLO metric are
+    exact functions of ``(workload, seed, policy)`` — byte-identical
+    across runs, machines and CI invocations.
+
+Clocks are per dispatch lane: each lane of a
+``core.serving.MultiLaneServer`` is an independent virtual accelerator
+whose local time advances with its own dispatches (the open-loop driver
+in ``frontend`` keeps idle lanes' clocks rode forward so admission
+stays causal).
+"""
+from __future__ import annotations
+
+import time
+
+#: The default clock: real (monotonic) time.
+wall_clock = time.monotonic
+
+
+class VirtualClock:
+    """Deterministic simulated time: moves only via :meth:`advance`.
+
+    Calling the instance returns the current virtual time in seconds.
+    ``advance`` adds a non-negative service duration; ``advance_to``
+    clamps forward to an absolute time (used by the open-loop driver to
+    ride idle lanes forward to the global frontier / next arrival).
+    """
+
+    __slots__ = ("_now",)
+
+    def __init__(self, start: float = 0.0):
+        self._now = float(start)
+
+    def __call__(self) -> float:
+        return self._now
+
+    @property
+    def now(self) -> float:
+        return self._now
+
+    def advance(self, dt: float) -> float:
+        if dt < 0:
+            raise ValueError(f"VirtualClock.advance(dt={dt}): dt must "
+                             "be >= 0 (virtual time is monotone)")
+        self._now += dt
+        return self._now
+
+    def advance_to(self, t: float) -> float:
+        """Move forward to absolute time ``t`` (no-op if already past)."""
+        if t > self._now:
+            self._now = t
+        return self._now
+
+    def __repr__(self) -> str:                      # pragma: no cover
+        return f"VirtualClock({self._now!r})"

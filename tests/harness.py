@@ -21,6 +21,15 @@ three contracts the engines promise:
 instead of hand-rolling per-file runners, so a new backend knob (such
 as ``devices``) lands in every gate by adding one case.
 
+The serving stack gets the same treatment: a :class:`ServingCase`
+names one deterministic virtual-clock serving configuration (lanes,
+policy, arrival process, offered load, admission cap),
+:func:`run_serving_case` executes it over a cached CRN workload corpus
+and returns tidy rows (one per request, plus the SLO summary row), and
+:func:`assert_serving_deterministic` is the serving spelling of the
+determinism contract — two runs of the same case are bit-exact.
+``tests/test_serving.py`` and CI's serving-smoke job ride on it.
+
 Compilation note: the jit engine compiles one lockstep ``while_loop``
 per (policy-config, batch-shape, table-width, device-count) tuple
 (seconds each); corpora here are deliberately shared — reuse
@@ -173,4 +182,91 @@ def assert_deterministic(case: EngineCase, tasksets, seeds, policy, *,
     rev = run_case(case, list(tasksets)[::-1], list(seeds)[::-1], policy,
                    duration=duration, **kw)
     assert_bit_exact(a, rev[::-1], f"{case.name}: reversed batch")
+    return a
+
+
+# ----------------------------------------------------------------------
+# The serving fixture family (virtual clock, fig12 stack)
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ServingCase:
+    """One deterministic virtual-clock serving configuration.
+
+    ``policy`` names a ``repro.serving.fig12.POLICIES`` entry;
+    ``arrivals`` one of ``traffic.PROCESS_KINDS``; ``lo_load`` is the
+    LO offered load as a multiple of pool capacity (>= 1 saturates).
+    Frozen + hashable so the workload corpus behind it can be
+    ``lru_cache``'d across tests the way ``fig8_corpus`` is.
+    """
+    name: str
+    lanes: int = 2
+    policy: str = "mesc"
+    arrivals: str = "poisson"
+    seed: int = 0
+    n_lo: int = 16
+    n_hi: int = 6
+    lo_load: float = 1.2
+    heuristic: str = "crit_aware"
+    max_live_lo: Optional[int] = None
+    hi_deadline_s: float = 0.5
+
+    def __str__(self) -> str:            # pytest id
+        return self.name
+
+
+@functools.lru_cache(maxsize=None)
+def serving_corpus(arrivals: str = "poisson", seed: int = 0,
+                   n_lo: int = 16, n_hi: int = 6, lo_load: float = 1.2,
+                   lanes: int = 2, lo_tokens: int = 48,
+                   hi_tokens: int = 6):
+    """CRN arrival realization shared by every case with the same
+    traffic knobs (policies differ, workload does not — common random
+    numbers is the whole comparison contract)."""
+    from repro.serving import build_workload, make_process
+    from repro.serving.frontend import ServiceModelSpec
+    svc = ServiceModelSpec()
+    capacity = lanes * svc.lane_capacity_rps(float(lo_tokens))
+    workload = build_workload(
+        seed=seed, lo_process=make_process(arrivals, lo_load * capacity),
+        hi_process=make_process("poisson", 0.25 * lanes),
+        n_lo=n_lo, n_hi=n_hi, lo_tokens=lo_tokens, hi_tokens=hi_tokens)
+    return tuple(workload)
+
+
+def run_serving_case(case: ServingCase,
+                     on_step=None) -> List[Dict[str, Any]]:
+    """Execute ``case`` on the virtual clock; tidy rows out.
+
+    One row per request (rid, class, timing, preemption counters,
+    generated-token digest) followed by the SLO summary row — a flat
+    ``assert_bit_exact``-able list, like :func:`run_case`'s."""
+    from repro.serving import run_virtual_serving, slo_summary
+    from repro.serving.fig12 import POLICIES
+    workload = serving_corpus(case.arrivals, case.seed, case.n_lo,
+                              case.n_hi, case.lo_load, case.lanes)
+    reqs = run_virtual_serving(
+        workload, lanes=case.lanes, policy=POLICIES[case.policy](),
+        seed=case.seed, heuristic=case.heuristic,
+        max_live_lo=case.max_live_lo, on_step=on_step)
+    out: List[Dict[str, Any]] = []
+    for rid in sorted(reqs):
+        r = reqs[rid]
+        out.append(dict(
+            rid=rid, crit=r.crit.value, done=r.done,
+            submitted_at=r.submitted_at, first_token_at=r.first_token_at,
+            finished_at=r.finished_at, preemptions=r.preemptions,
+            saves=r.saves, tokens=tuple(r.generated)))
+    out.append(slo_summary(reqs.values(),
+                           hi_deadline_s=case.hi_deadline_s))
+    return out
+
+
+def assert_serving_deterministic(case: ServingCase) -> List[Dict[str, Any]]:
+    """The determinism contract, serving spelling: the same case run
+    twice produces bit-exact request timelines and SLO rows (this is
+    what lets CI gate fig12 output byte-identically)."""
+    a = run_serving_case(case)
+    b = run_serving_case(case)
+    assert_bit_exact(a, b, f"{case.name}: repeat serving run")
     return a

@@ -1,0 +1,144 @@
+"""Property tests for the serving admission layer.
+
+Three invariants the front end promises (docs/serving.md), exercised
+over randomized inputs via hypothesis — or the deterministic fallback
+sampler (``repro._compat.hypothesis_fallback``) on images without it;
+both paths run the same properties:
+
+  * **arena quota** — no interleaving of acquire/release ever leaves a
+    lane holding more KV slots than its static quota, and an
+    over-acquire raises instead of silently oversubscribing;
+  * **conservation** — ``finished + live + queued == submitted`` at
+    every observable step of an open-loop serving run (no request is
+    ever dropped or double-counted by the front door);
+  * **HI-never-behind-LO** — in any front-door drain order and in any
+    lane's eligible order, a HI-criticality request is never queued
+    behind a LO one.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.scheduler import Policy
+from repro.core.serving import KVSlotArena, MESCServer, Request
+from repro.core.task import Crit
+
+from harness import ServingCase, run_serving_case
+
+
+class TestArenaQuota:
+    @settings(max_examples=25, deadline=None)
+    @given(total=st.integers(2, 12), n_lanes=st.integers(1, 4),
+           ops=st.lists(st.tuples(st.integers(0, 3),    # lane (mod)
+                                  st.integers(0, 15),   # rid
+                                  st.booleans()),       # acquire?
+                        min_size=1, max_size=60))
+    def test_no_interleaving_exceeds_quota(self, total, n_lanes, ops):
+        n_lanes = min(n_lanes, total)       # every lane needs >= 1 slot
+        arena = KVSlotArena(total, n_lanes)
+        assert sum(arena.quotas) == total   # quotas partition the pool
+        for lane_raw, rid, acquire in ops:
+            lane = lane_raw % n_lanes
+            if acquire:
+                if arena.can_admit(lane) or rid in arena._held[lane]:
+                    arena.acquire(lane, rid)
+                else:
+                    with pytest.raises(RuntimeError, match="over quota"):
+                        arena.acquire(lane, rid)
+            else:
+                arena.release(lane, rid)
+            assert all(arena.held(i) <= arena.quotas[i]
+                       for i in range(n_lanes))
+
+    def test_quota_validation(self):
+        with pytest.raises(ValueError, match="partition"):
+            KVSlotArena(4, 2, quotas=[3, 3])
+        with pytest.raises(ValueError, match=">= 1 slot"):
+            KVSlotArena(2, 2, quotas=[2, 0])
+
+
+class TestConservation:
+    @settings(max_examples=6, deadline=None)
+    @given(seed=st.integers(0, 10 ** 6),
+           policy=st.sampled_from(["mesc", "np"]),
+           cap=st.sampled_from([None, 1, 2]))
+    def test_every_step_conserves_requests(self, seed, policy, cap):
+        """finished + live + queued == submitted after every scheduler
+        step of a full open-loop run (the hook also re-checks the
+        front door's own accounting)."""
+        case = ServingCase(f"prop-{policy}-{seed}-{cap}", policy=policy,
+                           seed=seed, n_lo=8, n_hi=3, max_live_lo=cap)
+        checks = []
+
+        def watch(front, server):
+            front.check_conservation()      # raises on violation
+            checks.append(front.submitted)
+
+        rows = run_serving_case(case, on_step=watch)
+        assert checks, "driver never stepped"
+        assert checks[-1] == case.n_lo + case.n_hi  # all arrived
+        summary = rows[-1]
+        assert summary["hi_finished"] + summary["lo_finished"] \
+            == case.n_lo + case.n_hi                 # all finished
+
+
+class TestHiNeverBehindLo:
+    @settings(max_examples=15, deadline=None)
+    @given(n_hi=st.integers(1, 5), n_lo=st.integers(1, 8),
+           seed=st.integers(0, 10 ** 6))
+    def test_eligible_order(self, n_hi, n_lo, seed):
+        """In a lane's eligible order every HI request precedes every
+        LO request, whatever the submission interleaving."""
+        rng = np.random.default_rng(seed)
+        srv = MESCServer(None, None, policy=Policy.mesc(), max_len=16,
+                         jit_fns=(lambda *a: None, lambda *a: None))
+        reqs = ([Request(rid=i, priority=i,
+                         prompt=np.asarray([i], np.int32),
+                         max_new_tokens=2, crit=Crit.HI)
+                 for i in range(n_hi)]
+                + [Request(rid=100 + i, priority=1_000_000 + i,
+                           prompt=np.asarray([i], np.int32),
+                           max_new_tokens=2, crit=Crit.LO)
+                   for i in range(n_lo)])
+        rng.shuffle(reqs)
+        for r in reqs:
+            srv.submit(r)
+        order = [r.crit for r in srv.eligible_order()]
+        assert order == sorted(order,
+                               key=lambda c: 0 if c == Crit.HI else 1)
+        assert order.count(Crit.HI) == n_hi
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 10 ** 6), cap=st.sampled_from([None, 1]))
+    def test_front_door_admission_order(self, seed, cap):
+        """pump() admits every queued HI request before any LO request
+        — even when the LO throttle is wide open."""
+        from repro.serving import FrontDoor
+        from repro.serving.traffic import ArrivalSpec
+
+        class Sink:                        # records admission order
+            def __init__(self):
+                self.requests = {}
+
+            def submit(self, r):
+                r.submitted_at = r.submitted_at or 0.0
+                self.requests[r.rid] = r
+
+        rng = np.random.default_rng(seed)
+        front = FrontDoor(Sink(), max_live_lo=cap)
+        specs = ([ArrivalSpec(t=0.0, rid=i, crit=Crit.HI, priority=i,
+                              max_new_tokens=1) for i in range(3)]
+                 + [ArrivalSpec(t=0.0, rid=10 + i, crit=Crit.LO,
+                                priority=1_000_000 + i,
+                                max_new_tokens=1) for i in range(4)])
+        rng.shuffle(specs)
+        for s in specs:
+            front.arrive(s)
+        admitted = front.pump()
+        crits = [front.server.requests[rid].crit for rid in admitted]
+        hi_tail = crits.index(Crit.LO) if Crit.LO in crits else len(crits)
+        assert all(c == Crit.HI for c in crits[:hi_tail])
+        assert crits.count(Crit.HI) == 3   # HI is never throttled
+        if cap == 1:
+            assert crits.count(Crit.LO) == 1
+        front.check_conservation()

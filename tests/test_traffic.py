@@ -1,0 +1,168 @@
+"""Statistical + determinism gates for the traffic layer
+(repro/serving/traffic.py).
+
+Each generator gets two kinds of gate: *distributional* (the process
+is what it claims — rate, dispersion, tail shape — checked against
+analytic confidence bounds, no scipy) and *mechanical* (CRN
+determinism, stream decorrelation, prefix stability, exact trace
+round-trip — the properties fig12's common-random-numbers comparison
+and the CI byte-identical gate stand on)."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.serving.traffic import (PROCESS_KINDS, Diurnal, HeavyTail,
+                                   Poisson, Trace, build_workload,
+                                   crn_bits, crn_u01, load_trace,
+                                   make_process, save_trace)
+from repro.core.task import Crit
+
+N = 20_000          # gap-sample size for the distributional gates
+RATE = 3.0
+SEED = 11
+
+
+def _counts(times, width=1.0):
+    """Arrivals per consecutive window of ``width`` seconds."""
+    return np.bincount((np.asarray(times) / width).astype(int))
+
+
+class TestDistributions:
+    def test_poisson_mean_rate_within_ci(self):
+        """Sample mean gap within 5 standard errors of 1/rate (for
+        exponential gaps the SE is exactly mean/sqrt(n))."""
+        gaps = Poisson(RATE).inter_arrivals(SEED, "lo_arrivals", N)
+        mean = gaps.mean()
+        se = (1.0 / RATE) / np.sqrt(N)
+        assert abs(mean - 1.0 / RATE) < 5 * se, (mean, se)
+
+    def test_poisson_counts_are_equidispersed(self):
+        """Index of dispersion (var/mean of per-window counts) ~ 1 for
+        a Poisson process; the bound is +-6 standard errors of the
+        dispersion statistic (~sqrt(2/n_windows))."""
+        t = Poisson(RATE).arrival_times(SEED, "lo_arrivals", N)
+        c = _counts(t)
+        d = c.var() / c.mean()
+        tol = 6 * np.sqrt(2.0 / len(c))
+        assert abs(d - 1.0) < tol, (d, tol)
+
+    def test_heavy_tail_matches_mean_but_overdisperses(self):
+        """Lomax gaps are calibrated to the same mean rate as Poisson
+        (CRN load-matching) yet visibly burstier: window-count
+        dispersion well above the Poisson band."""
+        ht = HeavyTail(RATE, alpha=2.2)
+        gaps = ht.inter_arrivals(SEED, "lo_arrivals", N)
+        # Lomax(x_m, a) mean x_m/(a-1) = 1/rate; SE via sample std
+        se = gaps.std() / np.sqrt(N)
+        assert abs(gaps.mean() - 1.0 / RATE) < 5 * se
+        d = _counts(ht.arrival_times(SEED, "lo_arrivals", N))
+        dp = _counts(Poisson(RATE).arrival_times(SEED, "lo_arrivals", N))
+        assert d.var() / d.mean() > 1.3 > dp.var() / dp.mean()
+
+    def test_heavy_tail_dominates_exponential_tail(self):
+        """The burst gate itself: heavy-tail gap quantiles dominate the
+        rate-matched exponential's at and beyond p99."""
+        ht = HeavyTail(RATE).inter_arrivals(SEED, "lo_arrivals", N)
+        ex = Poisson(RATE).inter_arrivals(SEED, "lo_arrivals", N)
+        for q in (0.99, 0.999):
+            assert np.quantile(ht, q) > np.quantile(ex, q), q
+        assert ht.max() > 3 * ex.max()
+
+    def test_diurnal_peak_beats_trough(self):
+        """The sinusoidal envelope shows up in the realization: arrival
+        density around the rate peak (phase pi/2) exceeds the trough
+        (phase 3pi/2) by at least the half-amplitude ratio."""
+        proc = Diurnal(RATE, amplitude=0.8, period_s=40.0)
+        t = proc.arrival_times(SEED, "lo_arrivals", N)
+        phase = (t % proc.period_s) / proc.period_s     # [0, 1)
+        peak = np.sum((phase > 0.10) & (phase < 0.40))  # around 0.25
+        trough = np.sum((phase > 0.60) & (phase < 0.90))
+        assert peak > 1.5 * trough, (peak, trough)
+
+
+class TestDeterminism:
+    def test_same_key_is_bit_identical(self):
+        idx = np.arange(4096)
+        a = crn_bits(SEED, "lo_arrivals", idx)
+        b = crn_bits(SEED, "lo_arrivals", idx)
+        assert np.array_equal(a, b)
+        # scalar and vectorized spellings agree
+        assert crn_bits(SEED, "lo_arrivals", 7) == a[7]
+
+    def test_streams_and_seeds_decorrelate(self):
+        """Distinct stream names / seeds give unrelated sequences:
+        no collisions and ~zero correlation between the u01 draws."""
+        idx = np.arange(8192)
+        a = crn_u01(SEED, "lo_arrivals", idx)
+        b = crn_u01(SEED, "hi_arrivals", idx)
+        c = crn_u01(SEED + 1, "lo_arrivals", idx)
+        for other in (b, c):
+            assert not np.any(a == other)
+            r = np.corrcoef(a, other)[0, 1]
+            assert abs(r) < 5.0 / np.sqrt(len(idx)), r
+
+    @pytest.mark.parametrize("kind", ("poisson", "heavy_tail", "diurnal"))
+    def test_prefix_stable(self, kind):
+        """arrival_times(n) is exactly the prefix of arrival_times(m>n)
+        — the counter-keyed property that makes workload size a free
+        knob (no resampling when a sweep grows)."""
+        proc = make_process(kind, RATE)
+        short = proc.arrival_times(SEED, "lo_arrivals", 100)
+        long = proc.arrival_times(SEED, "lo_arrivals", 1000)
+        assert np.array_equal(short, long[:100])
+
+    def test_trace_round_trip_exact(self, tmp_path):
+        times = list(Poisson(RATE).arrival_times(SEED, "lo_arrivals",
+                                                 500))
+        p = save_trace(times, tmp_path / "t.json")
+        got = load_trace(p)
+        assert list(got.times) == [float(t) for t in times]  # bit-exact
+        assert np.array_equal(got.arrival_times(0, "x", 500),
+                              np.asarray(times))
+
+    def test_trace_validation(self, tmp_path):
+        with pytest.raises(ValueError, match="ascending"):
+            Trace(times=(2.0, 1.0))
+        with pytest.raises(ValueError, match="holds"):
+            Trace(times=(0.5, 1.0)).arrival_times(0, "x", 3)
+        bad = tmp_path / "bad.json"
+        bad.write_text(json.dumps({"version": 99, "times": [0.1]}))
+        with pytest.raises(ValueError, match="version"):
+            load_trace(bad)
+
+
+class TestWorkload:
+    def test_make_process_validation(self):
+        with pytest.raises(ValueError, match="unknown arrival"):
+            make_process("uniform", RATE)
+        with pytest.raises(ValueError, match="trace_path"):
+            make_process("trace", RATE)
+        with pytest.raises(ValueError, match="rate"):
+            Poisson(0.0)
+        with pytest.raises(ValueError, match="alpha"):
+            HeavyTail(RATE, alpha=1.0)
+        with pytest.raises(ValueError, match="amplitude"):
+            Diurnal(RATE, amplitude=1.5)
+        assert set(PROCESS_KINDS) == {"poisson", "heavy_tail",
+                                      "diurnal", "trace"}
+
+    def test_build_workload_invariants(self):
+        wl = build_workload(seed=SEED, lo_process=Poisson(RATE),
+                            hi_process=Poisson(0.5), n_lo=40, n_hi=10,
+                            lo_tokens=64, hi_tokens=8)
+        assert [s.rid for s in wl] == list(range(50))
+        assert all(a.t <= b.t for a, b in zip(wl, wl[1:]))  # time-sorted
+        his = [s for s in wl if s.crit == Crit.HI]
+        los = [s for s in wl if s.crit == Crit.LO]
+        assert len(his) == 10 and len(los) == 40
+        # priority convention: every HI priority below every LO priority
+        assert max(s.priority for s in his) < min(s.priority for s in los)
+        assert all(s.max_new_tokens >= 1 for s in wl)
+        # token budgets land in the documented uniform band
+        assert all(32 <= s.max_new_tokens <= 96 for s in los)
+        # same seed rebuild is identical (workload is pure CRN)
+        again = build_workload(seed=SEED, lo_process=Poisson(RATE),
+                               hi_process=Poisson(0.5), n_lo=40, n_hi=10,
+                               lo_tokens=64, hi_tokens=8)
+        assert wl == again
