@@ -20,16 +20,17 @@ U = 0.8
 OVERRUN = 0.5
 
 
-def sweeps(full: bool = False, engine: str = "event", devices=None):
+def sweeps(full: bool = False, engine: str = "event", devices=None,
+           scenario=None):
     n_sets = 400 if full else max(DEFAULT_SETS // 2, 30)
     return (Sweep(name="fig10_gamma", policies=(Policy.mesc(),),
                   utils=(U,), gammas=GAMMAS, n_sets=n_sets,
                   overrun_prob=OVERRUN, engine=engine,
-                  devices=devices),
+                  devices=devices, scenario=scenario),
             Sweep(name="fig10_beta", policies=(Policy.mesc(),),
                   utils=(U,), n_tasks=BETAS, n_sets=n_sets,
                   overrun_prob=OVERRUN, engine=engine,
-                  devices=devices))
+                  devices=devices, scenario=scenario))
 
 
 def _surv(cell) -> float:
@@ -37,8 +38,8 @@ def _surv(cell) -> float:
 
 
 def main(full: bool = False, engine: str = "event", devices=None,
-         **campaign_kw):
-    gamma_sweep, beta_sweep = sweeps(full, engine, devices)
+         scenario=None, **campaign_kw):
+    gamma_sweep, beta_sweep = sweeps(full, engine, devices, scenario)
     n_sets = gamma_sweep.n_sets
     out = {}
     with Timer() as t:

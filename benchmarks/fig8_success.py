@@ -23,17 +23,17 @@ SYSTEMS = (("mesc", Policy.mesc()),
 
 
 def sweep(full: bool = False, engine: str = "event",
-          devices=None) -> Sweep:
+          devices=None, scenario=None) -> Sweep:
     n_sets = 1000 if full else DEFAULT_SETS
     return Sweep(name="fig8_success",
                  policies=tuple(p for _, p in SYSTEMS),
                  utils=UTILS, n_sets=n_sets, engine=engine,
-                 devices=devices)
+                 devices=devices, scenario=scenario)
 
 
 def main(full: bool = False, engine: str = "event", devices=None,
-         **campaign_kw):
-    sw = sweep(full, engine, devices)
+         scenario=None, **campaign_kw):
+    sw = sweep(full, engine, devices, scenario)
     with Timer() as t:
         rows = Campaign(sw, **campaign_kw).collect()
     n_sets = sw.n_sets

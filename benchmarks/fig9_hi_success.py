@@ -15,19 +15,20 @@ BETAS = (4, 8, 10, 14, 20)
 U = 0.8
 
 
-def sweeps(full: bool = False, engine: str = "event", devices=None):
+def sweeps(full: bool = False, engine: str = "event", devices=None,
+           scenario=None):
     n_sets = 400 if full else max(DEFAULT_SETS // 2, 30)
     return (Sweep(name="fig9_gamma", policies=(Policy.mesc(),),
                   utils=(U,), gammas=GAMMAS, n_sets=n_sets, engine=engine,
-                  devices=devices),
+                  devices=devices, scenario=scenario),
             Sweep(name="fig9_beta", policies=(Policy.mesc(),),
                   utils=(U,), n_tasks=BETAS, n_sets=n_sets, engine=engine,
-                  devices=devices))
+                  devices=devices, scenario=scenario))
 
 
 def main(full: bool = False, engine: str = "event", devices=None,
-         **campaign_kw):
-    gamma_sweep, beta_sweep = sweeps(full, engine, devices)
+         scenario=None, **campaign_kw):
+    gamma_sweep, beta_sweep = sweeps(full, engine, devices, scenario)
     n_sets = gamma_sweep.n_sets
     out = {}
     with Timer() as t:

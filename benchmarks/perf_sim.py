@@ -272,6 +272,21 @@ def measure(spec, skip_equivalence: bool = False, devices=None,
     engines["jit"]["xla_kernels"] = lockstep_kernel_count(
         tasksets[:nk], lib, policy, seeds=seeds[:nk],
         duration=spec["duration"])
+    # disabled scenarios must stay compiled-out: a neutral scenario
+    # (faults@0 — every component statically off) must trace to the
+    # identical compiled body as the scenario-free graph.  The timed
+    # rows above already run with scenario=None, so the print_delta
+    # rows against the committed baseline are the scenario-off
+    # throughput cost the scenario layer is gated on (< noise).
+    neutral = lockstep_kernel_count(
+        tasksets[:nk], lib, policy, seeds=seeds[:nk],
+        duration=spec["duration"], scenario="faults@0")
+    engines["jit"]["xla_kernels_neutral_scenario"] = neutral
+    if neutral != engines["jit"]["xla_kernels"]:
+        raise SystemExit(
+            f"neutral scenario compiled {neutral} body kernels vs "
+            f"{engines['jit']['xla_kernels']} scenario-free — disabled "
+            "scenario components must add zero operations")
 
     # jit pts/s per logical device count, every sharded run asserted
     # bit-identical to the devices=1 rows *from the same process* — a
@@ -426,7 +441,9 @@ def main() -> None:
         print(f"{eng},{e['seconds']}s,{e['points_per_sec']}pts/s,"
               f"spread={e['spread_pct']}%")
     print(f"jit_kernels,{section},"
-          f"{result['engines']['jit']['xla_kernels']}")
+          f"{result['engines']['jit']['xla_kernels']},"
+          f"neutral_scenario="
+          f"{result['engines']['jit']['xla_kernels_neutral_scenario']}")
     for d, st in result["engines"]["jit"]["device_scaling"].items():
         if "points_per_sec" in st:
             print(f"jit_devices,{d},{st['points_per_sec']}pts/s,"

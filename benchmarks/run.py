@@ -7,8 +7,8 @@ pure cache replay.  Prints ``name,us_per_call,derived`` CSV summary
 lines (plus the per-figure CSV blocks above them).
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--only fig7,fig8]
-        [--engine event|vec|jit] [--devices N] [--workers N]
-        [--cache-dir DIR] [--no-cache] [--smoke]
+        [--engine event|vec|jit] [--devices N] [--scenario NAME]
+        [--workers N] [--cache-dir DIR] [--no-cache] [--smoke]
 
 ``--full`` uses the paper's 1000 task sets per point (slow); default is
 a statistically-meaningful reduction.  ``--engine vec`` routes the
@@ -19,7 +19,11 @@ statistically equivalent RNG contract).  ``--devices N`` shards the
 jit engine's point axis over N logical host devices (bit-identical
 results and shared cache entries at any count — a pure throughput
 knob; see docs/performance.md).  Each engine has its own cache
-namespace, see docs/performance.md.  ``--smoke`` runs a 2-point sweep
+namespace, see docs/performance.md.  ``--scenario NAME`` runs the
+scenario-capable sim figures (fig8/fig9/fig10) under a declarative
+fault/demand scenario (``repro.scenarios``, e.g. ``heavy_tail`` or
+``faults@0.5``; see docs/scenarios.md) — fig13 sweeps the whole
+``faults@<x>`` family itself.  ``--smoke`` runs a 2-point sweep
 end-to-end (used by CI).
 """
 from __future__ import annotations
@@ -28,13 +32,14 @@ import argparse
 import sys
 
 
-def smoke(engine: str = "event", devices=None, **campaign_kw) -> None:
+def smoke(engine: str = "event", devices=None, scenario=None,
+          **campaign_kw) -> None:
     """Tiny end-to-end campaign: 2 points through the full engine path."""
     from repro.core import Policy
     from repro.experiments import Campaign, Sweep
     sweep = Sweep(name="smoke", policies=(Policy.mesc(),), utils=(0.7,),
                   n_sets=2, duration=2e6, engine=engine,
-                  devices=devices)
+                  devices=devices, scenario=scenario)
     camp = Campaign(sweep, **campaign_kw)
     rows = camp.collect()
     print("point,policy,u,seed,jobs,success_all")
@@ -51,7 +56,8 @@ def main() -> None:
                     help="paper-scale experiment sizes (1000 task sets)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset (fig2,fig6,fig7,fig8,"
-                         "fig9,fig10,fig11,fig12,overhead,roofline)")
+                         "fig9,fig10,fig11,fig12,fig13,overhead,"
+                         "roofline)")
     ap.add_argument("--workers", type=int, default=None,
                     help="worker processes per campaign "
                          "(default: CPU count / $REPRO_WORKERS)")
@@ -72,20 +78,34 @@ def main() -> None:
                          "points over (requires --engine jit; results "
                          "and cache entries are identical at any "
                          "count)")
+    ap.add_argument("--scenario", default=None,
+                    help="declarative fault/demand scenario for the "
+                         "scenario-capable sim figures (fig8/fig9/"
+                         "fig10) and --smoke; a registry name like "
+                         "'heavy_tail' or 'faults@<intensity>' — "
+                         "unknown names fail loudly")
     args = ap.parse_args()
     if args.devices is not None and args.engine != "jit":
         ap.error("--devices requires --engine jit")
+    if args.scenario is not None:      # fail loudly before any campaign
+        from repro.scenarios import get_scenario
+        try:
+            get_scenario(args.scenario)
+        except ValueError as e:
+            ap.error(str(e))
     campaign_kw = dict(workers=args.workers, cache_dir=args.cache_dir,
                        use_cache=not args.no_cache)
 
     if args.smoke:
-        smoke(engine=args.engine, devices=args.devices, **campaign_kw)
+        smoke(engine=args.engine, devices=args.devices,
+              scenario=args.scenario, **campaign_kw)
         return
 
     from benchmarks import (fig2_instruction_costs, fig6_banks,
                             fig7_blocking, fig8_success, fig9_hi_success,
                             fig10_survivability, fig11_multiacc,
-                            fig12_serving_slo, tbl_overhead, roofline)
+                            fig12_serving_slo, fig13_fault_survivability,
+                            tbl_overhead, roofline)
     table = {
         "fig2": fig2_instruction_costs.main,
         "fig6": fig6_banks.main,
@@ -95,16 +115,23 @@ def main() -> None:
         "fig10": fig10_survivability.main,
         "fig11": fig11_multiacc.main,
         "fig12": fig12_serving_slo.main,
+        "fig13": fig13_fault_survivability.main,
         "overhead": tbl_overhead.main,
         "roofline": roofline.main,
     }
+    # sim figures that take a scenario axis (the rest are scenario-free
+    # analyses; --scenario leaves them untouched)
+    scenario_figs = {"fig8", "fig9", "fig10"}
     only = args.only.split(",") if args.only else list(table)
     print("name,us_per_call,derived")
     for name in only:
         print(f"# === {name} ===", file=sys.stderr)
+        kw = dict(campaign_kw)
+        if args.scenario is not None and name in scenario_figs:
+            kw["scenario"] = args.scenario
         try:
             table[name](full=args.full, engine=args.engine,
-                        devices=args.devices, **campaign_kw)
+                        devices=args.devices, **kw)
         except Exception as e:  # keep the harness going
             print(f"{name},0,ERROR:{type(e).__name__}:{e}")
 

@@ -361,6 +361,10 @@ class MultiLaneServer:
                        clock=per_lane_clocks[i], cs_costs=cs_costs)
             for i in range(n_lanes)]
         self.lane_of: Dict[int, int] = {}
+        # lanes currently inside a fault-scenario outage window: the
+        # partitioner never places new requests on them (in-flight work
+        # stays put and resumes when the driver unblocks the lane)
+        self.blocked_lanes: set = set()
 
     # -- request -> lane partitioning ---------------------------------------
     def _live(self, lane: MESCServer, crit: Optional[Crit] = None) -> int:
@@ -369,21 +373,26 @@ class MultiLaneServer:
 
     def _assign(self, r: Request) -> int:
         n = len(self.lanes)
+        # blocked (outage-window) lanes are excluded while any healthy
+        # lane exists; with every lane blocked fall back to all lanes
+        # so a direct submit still lands somewhere deterministic
+        cand = [i for i in range(n) if i not in self.blocked_lanes] \
+            or list(range(n))
         if self.heuristic == "first_fit":
-            return next((i for i in range(n)
+            return next((i for i in cand
                          if self._live(self.lanes[i]) < self.arena.quotas[i]),
-                        min(range(n),
+                        min(cand,
                             key=lambda i: self._live(self.lanes[i])))
         if self.heuristic == "worst_fit":
-            return min(range(n), key=lambda i: self._live(self.lanes[i]))
+            return min(cand, key=lambda i: self._live(self.lanes[i]))
         # crit_aware: spread HI (tiebreak on total load so a HI request
         # lands on an idle lane, not behind running LO work); LO avoids
         # HI-loaded lanes (x2 weight)
         if r.crit == Crit.HI:
-            return min(range(n),
+            return min(cand,
                        key=lambda i: (self._live(self.lanes[i], Crit.HI),
                                       self._live(self.lanes[i])))
-        return min(range(n),
+        return min(cand,
                    key=lambda i: self._live(self.lanes[i], Crit.LO)
                    + 2 * self._live(self.lanes[i], Crit.HI))
 

@@ -41,6 +41,8 @@ import numpy as np
 
 from repro.core.executor import GemminiRT
 from repro.core.program import Program
+from repro.scenarios import (demand_multiplier, get_scenario,
+                             shifted_phases)
 from repro.core.scheduler import (ACTIVE, Mode, Policy, pick_next,
                                   update_mode)
 from repro.core.task import Crit, Status, TCB, TaskParams
@@ -75,6 +77,14 @@ _RELEASE = int(EventKind.RELEASE)
 _FINISH = int(EventKind.FINISH)
 _OVERRUN = int(EventKind.OVERRUN)
 _TICK = int(EventKind.TICK)
+
+#: Demand profiles every engine understands.  "sampled" draws each
+#: release's demand from the host rng stream (the engines' historical
+#: behaviour); "nominal" pins demand at c_lo and consumes zero draws
+#: (the vec<->jit bit-exactness corpus).  Canonical definition lives
+#: here (the event engine is the semantic reference); simulator_vec
+#: re-exports it.
+DEMAND_PROFILES = ("sampled", "nominal")
 
 
 class AggSamples:
@@ -158,10 +168,78 @@ class RunMetrics:
         return self.lo_done_in_hi / self.lo_released_in_hi
 
 
+class DemandSampler:
+    """One scenario-aware demand/overrun sampler shared by the single-
+    and multi-accelerator event engines (hoisted from their previously
+    duplicated ``_sample_demand`` bodies, so the scenario hooks cannot
+    drift between the two paths).
+
+    Draw-order contract (bit-exactness vs the vec engine): the
+    "sampled" profile consumes, per *accepted* release, exactly one
+    ``rng.random()`` overrun coin for HI tasks plus one ``rng.uniform``
+    magnitude; the "nominal" profile consumes no draws.  Scenario
+    multipliers never touch the host stream: they are counter-based CRN
+    draws keyed ``(seed, component, task_column, release_index)`` — the
+    same keys the vec/jit lockstep uses — where ``release_index``
+    counts *every* release event (accepted, busy-missed, or AMC-
+    dropped), making the fault realization policy-independent.
+    """
+
+    def __init__(self, rng, tasks, *, seed, overrun_prob, cf,
+                 demand_profile="sampled", scenario=None):
+        if demand_profile not in DEMAND_PROFILES:
+            raise ValueError(
+                f"unknown demand_profile {demand_profile!r}; want one "
+                f"of {DEMAND_PROFILES}")
+        self.rng = rng
+        self.overrun_prob = overrun_prob
+        self.cf = cf
+        self.nominal = demand_profile == "nominal"
+        self.scenario = get_scenario(scenario)
+        self.seed64 = np.uint64(np.int64(seed))
+        self._col = {t.tid: np.uint64(i) for i, t in enumerate(tasks)}
+        self._rel_n: Dict[int, int] = {t.tid: 0 for t in tasks}
+
+    def count_release(self, tid: int) -> int:
+        """Absolute release index of this release event — the host twin
+        of the vec/jit engines' ``sn`` scenario counter.  Call once at
+        release-handler entry (before any accept/drop gate); the draw
+        for the release uses the returned pre-bump value."""
+        n = self._rel_n[tid]
+        self._rel_n[tid] = n + 1
+        return n
+
+    def shift_phase(self, tid: int, phase: float, period: float) -> float:
+        """Apply the scenario's phase-shift component to one task's
+        host-drawn initial release phase."""
+        scen = self.scenario
+        if scen is None or not scen.has_phase_shift:
+            return phase
+        return float(shifted_phases(scen, self.seed64, self._col[tid],
+                                    phase, period))
+
+    def sample(self, p: TaskParams, rel_n: int, t: float) -> float:
+        """Demand for one accepted release of task ``p`` (release index
+        ``rel_n``, release time ``t``)."""
+        if self.nominal:
+            d = p.c_lo
+        elif p.crit == Crit.HI and self.rng.random() < self.overrun_prob:
+            d = p.c_lo * self.rng.uniform(1.0, self.cf)
+        else:
+            d = p.c_lo * self.rng.uniform(0.7, 1.0)
+        scen = self.scenario
+        if scen is not None and scen.affects_demand:
+            m = demand_multiplier(scen, np, self.seed64, self._col[p.tid],
+                                  np.uint64(rel_n), np.float64(t))
+            d = d * float(m)
+        return d
+
+
 class MCSSimulator:
     def __init__(self, tasks: List[TaskParams], programs: Dict[str, Program],
                  policy: Policy, *, duration: float = 2e7, seed: int = 0,
-                 overrun_prob: float = 0.3, cf: float = 2.0):
+                 overrun_prob: float = 0.3, cf: float = 2.0,
+                 demand_profile: str = "sampled", scenario=None):
         self.params = {t.tid: t for t in tasks}
         self.programs = programs
         self.policy = policy
@@ -169,6 +247,9 @@ class MCSSimulator:
         self.rng = np.random.default_rng(seed)
         self.overrun_prob = overrun_prob
         self.cf = cf
+        self.sampler = DemandSampler(
+            self.rng, tasks, seed=seed, overrun_prob=overrun_prob, cf=cf,
+            demand_profile=demand_profile, scenario=scenario)
         self.accel = GemminiRT(use_remapper=policy.use_banks)
         self.tcbs: Dict[int, TCB] = {t.tid: TCB(params=t) for t in tasks}
         self.metrics = RunMetrics()
@@ -198,11 +279,6 @@ class MCSSimulator:
 
     def _program(self, tid: int) -> Program:
         return self._progs[tid]
-
-    def _sample_demand(self, p: TaskParams) -> float:
-        if p.crit == Crit.HI and self.rng.random() < self.overrun_prob:
-            return p.c_lo * self.rng.uniform(1.0, self.cf)
-        return p.c_lo * self.rng.uniform(0.7, 1.0)
 
     def _next_tick(self, t: float) -> float:
         k = int(t // self._t_sr) + 1
@@ -358,7 +434,8 @@ class MCSSimulator:
     def run(self) -> RunMetrics:
         for tid, p in self.params.items():
             phase = self.rng.uniform(0, p.period)
-            self._push(phase, _RELEASE, tid)
+            self._push(self.sampler.shift_phase(tid, phase, p.period),
+                       _RELEASE, tid)
         self._run_started = 0.0
         events = self._events
         heappop = heapq.heappop
@@ -383,6 +460,7 @@ class MCSSimulator:
             elif kind == _RELEASE:
                 tcb = tcbs[tid]
                 p = tcb.params
+                rel_n = self.sampler.count_release(tid)
                 self._seq += 1
                 heappush(events, (t + p.period, self._seq, _RELEASE, tid))
                 if tcb.status != Status.PENDING:
@@ -396,7 +474,7 @@ class MCSSimulator:
                         and self.mode != Mode.LO:
                     continue                    # AMC: LO not released
                 tcb.release(t)
-                self.demand[tid] = self._sample_demand(p)
+                self.demand[tid] = self.sampler.sample(p, rel_n, t)
                 self.metrics.jobs[p.crit.value] += 1
                 tcb.released_in_hi = (p.crit == Crit.LO
                                       and self.mode != Mode.LO)
@@ -520,7 +598,8 @@ class MultiAccelSimulator:
                  duration: float = 2e7, seed: int = 0,
                  overrun_prob: float = 0.3, cf: float = 2.0,
                  dma_contention: bool = True,
-                 migration=None):
+                 migration=None, demand_profile: str = "sampled",
+                 scenario=None):
         from repro.core.platform import AcceleratorPool, MigrationPolicy
         self.params = {t.tid: t for t in tasks}
         self.programs = programs
@@ -529,6 +608,9 @@ class MultiAccelSimulator:
         self.rng = np.random.default_rng(seed)
         self.overrun_prob = overrun_prob
         self.cf = cf
+        self.sampler = DemandSampler(
+            self.rng, tasks, seed=seed, overrun_prob=overrun_prob, cf=cf,
+            demand_profile=demand_profile, scenario=scenario)
         self.dma_contention = dma_contention
         self.pool = AcceleratorPool(
             n_instances, use_remapper=policy.use_banks, heuristic=heuristic,
@@ -556,11 +638,6 @@ class MultiAccelSimulator:
 
     def _program(self, tid: int) -> Program:
         return self._progs[tid]
-
-    def _sample_demand(self, p: TaskParams) -> float:
-        if p.crit == Crit.HI and self.rng.random() < self.overrun_prob:
-            return p.c_lo * self.rng.uniform(1.0, self.cf)
-        return p.c_lo * self.rng.uniform(0.7, 1.0)
 
     def _next_tick(self, t: float) -> float:
         return (int(t // self.policy.t_sr) + 1) * self.policy.t_sr
@@ -829,7 +906,8 @@ class MultiAccelSimulator:
     def run(self) -> MultiRunMetrics:
         for tid, p in self.params.items():
             phase = self.rng.uniform(0, p.period)
-            self._push(phase, _RELEASE, tid)
+            self._push(self.sampler.shift_phase(tid, phase, p.period),
+                       _RELEASE, tid)
         while self._events:
             t, _, kind, key = heapq.heappop(self._events)
             if t > self.duration:
@@ -841,6 +919,7 @@ class MultiAccelSimulator:
                 st = self.insts[inst]
                 tcb = self.tcbs[tid]
                 p = tcb.params
+                rel_n = self.sampler.count_release(tid)
                 self._push(t + p.period, _RELEASE, tid)
                 if tcb.status != Status.PENDING:
                     if tcb.job_deadline != float("inf"):
@@ -854,7 +933,7 @@ class MultiAccelSimulator:
                         and mode != Mode.LO:
                     continue
                 tcb.release(t)
-                self.demand[tid] = self._sample_demand(p)
+                self.demand[tid] = self.sampler.sample(p, rel_n, t)
                 st.metrics.jobs[p.crit.value] += 1
                 tcb.released_in_hi = (p.crit == Crit.LO and mode != Mode.LO)
                 if tcb.released_in_hi:

@@ -174,6 +174,8 @@ from repro.core.simulator_vec import (_BB, _C_CI, _C_CIQ, _C_NONE, _C_PI,
 # re-exported here as the canonical name
 from repro.core.simulator_vec import JIT_SIM_SEMANTICS_VERSION  # noqa: F401
 from repro.core.task import TaskParams
+from repro.scenarios import (burst_multiplier, burst_window_index,
+                             demand_multiplier, get_scenario)
 # env validation + logical-device plumbing live with the other runtime
 # environment code; both are importable without JAX
 from repro.runtime.device_config import (_env_int, configure_host_devices,
@@ -281,7 +283,7 @@ def _table_max(k0: int) -> int:
 # ----------------------------------------------------------------------
 
 def _build_run(use_banks: bool, drop_lo: bool, preempt: str,
-               nominal: bool, prune: bool):
+               nominal: bool, prune: bool, scenario=None):
     """Compile the whole-simulation while_loop for one static config.
 
     Everything dynamic (per-batch tables, scalars, carry) is a traced
@@ -490,6 +492,38 @@ def _build_run(use_banks: bool, drop_lo: bool, preempt: str,
             dem = c_lo_r
         else:
             dem = _sample_demand(tb, sc, rcol, n_r, hi_r, c_lo_r)
+        if scenario is not None:
+            # scenario CRN draws: keyed on the absolute release-event
+            # counter ``sn`` (bumped for every release, accepted or
+            # not — policy-independent), never on the accepted-release
+            # counter n_r.  Same splitmix64 arithmetic as the host
+            # engines (scenarios.crn), so nominal-profile runs stay
+            # bit-exact vs the vec engine per scenario.  Carry writes
+            # happen inline (sn/sw/sm are read only here, so deferring
+            # them past the barrier buys nothing).
+            sn_r = _get(c["sn"], rcol)
+            if scenario.affects_demand:
+                if scenario.has_burst:
+                    wi = burst_window_index(scenario, jnp, now)
+                    fresh_bm = burst_multiplier(scenario, jnp,
+                                                tb["seed64"], wi)
+                    # per-window draw cached in the carry: pure in
+                    # (seed, window), so reuse is exact
+                    bm = jnp.where(wi == c["sw"], c["sm"], fresh_bm)
+                    c["sw"] = jnp.where(is_rel, wi, c["sw"])
+                    c["sm"] = jnp.where(is_rel, bm, c["sm"])
+                else:
+                    bm = None
+                # abs pins the (non-negative) product as a plain IEEE
+                # multiply — LLVM would otherwise contract it with
+                # downstream subtracts into an FMA and drift a ulp off
+                # the host engines' demand values (see scenarios
+                # ._nofuse)
+                dem = jnp.abs(dem * demand_multiplier(
+                    scenario, jnp, tb["seed64"],
+                    rcol.astype(jnp.uint64),
+                    sn_r.astype(jnp.uint64), now, burst_m=bm))
+            c["sn"] = _chain(c["sn"], (ohR, is_rel, sn_r + 1))
         mi_inc.append((_MI_JOBS + crit_r, accept, 1))
         rel_hi = accept & ~hi_r & (mode0 != _LO)
         mi_inc.append((_MI_LO_REL, rel_hi, 1))
@@ -972,12 +1006,14 @@ _SC_KEYS = ("t_sr", "overrun_prob", "cf", "duration", "max_steps")
 _CARRY_KEYS = (
     "flags", "exec_cy", "demand", "job_deadline", "blocked_since",
     "next_release", "tick_release", "res_bytes", "acc_bytes",
-    "ctx_acc", "ctx_spad", "ev_time", "ev_pay", "pi", "pf", "steps")
+    "ctx_acc", "ctx_spad", "ev_time", "ev_pay", "sn", "sw", "sm",
+    "pi", "pf", "steps")
 
 
 @functools.lru_cache(maxsize=None)
 def _compiled_run(use_banks: bool, drop_lo: bool, preempt: str,
-                  nominal: bool, prune: bool, devices: int = 1):
+                  nominal: bool, prune: bool, scenario=None,
+                  devices: int = 1):
     """One jitted runner per static (policy/profile, device count)
     class — the memo is what makes 'one compilation per shape/config'
     true: jax.jit caches specializations per *function object*, so
@@ -994,7 +1030,8 @@ def _compiled_run(use_banks: bool, drop_lo: bool, preempt: str,
     fast shard does not wait for a slow one's extra steps.  The carry
     (the dominant allocation) is donated in both variants.
     """
-    run = _build_run(use_banks, drop_lo, preempt, nominal, prune)
+    run = _build_run(use_banks, drop_lo, preempt, nominal, prune,
+                     scenario)
     if devices == 1:
         return jax.jit(run, donate_argnums=(2,))
     from jax.experimental.shard_map import shard_map
@@ -1095,6 +1132,13 @@ def _carry0(b: _VecBatch, seeds: Sequence[int], K: int,
         "ctx_spad": jnp.zeros((P, T), jnp.int32),
         "ev_time": jnp.full((P, K), jnp.inf),
         "ev_pay": jnp.full((P, K), -1, jnp.int32),
+        # scenario state: absolute release-event counter + the cached
+        # per-window burst draw (window index, multiplier).  Carried
+        # unconditionally so the carry pytree is scenario-independent;
+        # with scenario=None they are loop-invariant pass-throughs.
+        "sn": jnp.zeros((P, T), jnp.int32),
+        "sw": jnp.full((P,), -1, jnp.int32),
+        "sm": jnp.ones((P,)),
         "pi": jnp.asarray(pi0),
         "pf": jnp.asarray(pf0),
         "steps": jnp.zeros((), jnp.int64) if devices == 1
@@ -1113,7 +1157,7 @@ def _max_steps(b: _VecBatch, duration: float) -> int:
 def _run_once(b: _VecBatch, policy: Policy, seeds: Sequence[int],
               duration: float, overrun_prob: float, cf: float,
               nominal: bool, K: int,
-              devices: int = 1) -> Dict[str, np.ndarray]:
+              devices: int = 1, scenario=None) -> Dict[str, np.ndarray]:
     """One compiled run of a prepared batch at interrupt-table width
     ``K``, sharded over ``devices`` logical devices; returns the final
     carry as NumPy arrays."""
@@ -1124,7 +1168,7 @@ def _run_once(b: _VecBatch, policy: Policy, seeds: Sequence[int],
             "a devices x chunk rectangle")
     run = _compiled_run(policy.use_banks, policy.drop_lo_in_hi,
                         policy.preemption, nominal, _PRUNE_STALE,
-                        devices)
+                        scenario, devices)
     from jax.experimental import enable_x64
     max_steps = _max_steps(b, duration)
     # event times are float64; everything (array upload included) must
@@ -1152,7 +1196,7 @@ def _run_once(b: _VecBatch, policy: Policy, seeds: Sequence[int],
 def _run_chunk(tasksets, programs, policy, seeds, duration, overrun_prob,
                cf, demand_profile: str,
                point_ids: Optional[Sequence[int]] = None,
-               devices: int = 1) -> List[RunMetrics]:
+               devices: int = 1, scenario=None) -> List[RunMetrics]:
     """Simulate one (super)chunk with the per-point overflow-retry
     ladder.
 
@@ -1169,6 +1213,13 @@ def _run_chunk(tasksets, programs, policy, seeds, duration, overrun_prob,
     would silently drop interrupts.
     """
     nominal = demand_profile == "nominal"
+    scenario = get_scenario(scenario)
+    # only demand-affecting components reach the compiled loop (phase
+    # shift is applied host-side at batch init, instance loss is
+    # serving-only): a scenario with every in-loop component off shares
+    # the scenario-free graph — disabled scenarios stay compiled-out
+    loop_scen = scenario if scenario is not None \
+        and scenario.affects_demand else None
     out: List[Optional[RunMetrics]] = [None] * len(tasksets)
     idx = list(range(len(tasksets)))
     K = _table_width()
@@ -1185,9 +1236,11 @@ def _run_chunk(tasksets, programs, policy, seeds, duration, overrun_prob,
             ts = ts + [ts[-1]] * pad
             sd = sd + [sd[-1]] * pad
         b = _VecBatch(ts, programs, policy, seeds=sd, duration=duration,
-                      overrun_prob=overrun_prob, cf=cf)
+                      overrun_prob=overrun_prob, cf=cf,
+                      scenario=scenario)
         final = _run_once(b, policy, sd, duration, overrun_prob, cf,
-                          nominal, K, devices=devices if first else 1)
+                          nominal, K, devices=devices if first else 1,
+                          scenario=loop_scen)
         metrics = _assemble(b, final, duration)
         overflow = final["overflow"]
         redo = []
@@ -1264,7 +1317,8 @@ def lockstep_kernel_count(tasksets: Sequence[List[TaskParams]],
                           *, seeds: Sequence[int], duration: float = 2e7,
                           overrun_prob: float = 0.3, cf: float = 2.0,
                           demand_profile: str = "sampled",
-                          table_width: Optional[int] = None) -> int:
+                          table_width: Optional[int] = None,
+                          scenario=None) -> int:
     """Number of XLA kernels (fusion instructions) in the compiled
     lockstep computation for this batch shape/config.
 
@@ -1278,12 +1332,16 @@ def lockstep_kernel_count(tasksets: Sequence[List[TaskParams]],
     trajectory is tracked across PRs."""
     require_jax()
     nominal = demand_profile == "nominal"
+    scenario = get_scenario(scenario)
+    loop_scen = scenario if scenario is not None \
+        and scenario.affects_demand else None   # as simulate_jbatch
     K = _table_width() if table_width is None else table_width
     b = _VecBatch(tasksets, programs, policy,
                   seeds=[int(s) for s in seeds], duration=duration,
-                  overrun_prob=overrun_prob, cf=cf)
+                  overrun_prob=overrun_prob, cf=cf, scenario=scenario)
     run = _compiled_run(policy.use_banks, policy.drop_lo_in_hi,
-                        policy.preemption, nominal, _PRUNE_STALE)
+                        policy.preemption, nominal, _PRUNE_STALE,
+                        loop_scen)
     from jax.experimental import enable_x64
     max_steps = _max_steps(b, duration)
     with enable_x64():
@@ -1346,7 +1404,8 @@ def simulate_jbatch(tasksets: Sequence[List[TaskParams]],
                     overrun_prob: float = 0.3, cf: float = 2.0,
                     batch_size: int = 256,
                     demand_profile: str = "sampled",
-                    devices: Optional[int] = None) -> List[RunMetrics]:
+                    devices: Optional[int] = None,
+                    scenario=None) -> List[RunMetrics]:
     """Fully-compiled batch simulation: one ``lax.while_loop`` per
     superchunk of points, no host work inside the loop, the point axis
     sharded over ``devices`` logical devices (``None``: the
@@ -1372,6 +1431,6 @@ def simulate_jbatch(tasksets: Sequence[List[TaskParams]],
         part = _run_chunk([tasksets[i] for i in idxs], programs, policy,
                           [int(seeds[i]) for i in idxs], duration,
                           overrun_prob, cf, demand_profile,
-                          point_ids=idxs, devices=d)
+                          point_ids=idxs, devices=d, scenario=scenario)
         out.extend(part[:real])
     return out

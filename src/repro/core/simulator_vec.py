@@ -64,8 +64,9 @@ from repro.core.isa import (ACCUM_BYTES, BANK_BYTES, CONFIG_CYCLES,
                             SCRATCHPAD_BANKS)
 from repro.core.program import Program
 from repro.core.scheduler import Policy
-from repro.core.simulator import RunMetrics
+from repro.core.simulator import DEMAND_PROFILES, RunMetrics
 from repro.core.task import Crit, TaskParams
+from repro.scenarios import demand_multiplier, get_scenario, shifted_phases
 
 # Cache-key salt for campaign points executed by the vectorized backend.
 # BUMP whenever a change to this module alters any simulated result.
@@ -83,7 +84,10 @@ VEC_SIM_SEMANTICS_VERSION = 1
 # engine internals were rebuilt wholesale, so the cache namespace
 # rolls over defensively rather than trusting the proof with stale
 # campaign rows).
-JIT_SIM_SEMANTICS_VERSION = 2
+# v3 = scenario layer: new sn/sw/sm carry tensors.  scenario=None
+# results are unchanged, but the carry pytree (and hence the compiled
+# graph) changed shape, so the namespace rolls over.
+JIT_SIM_SEMANTICS_VERSION = 3
 
 # status codes (mirror task.Status)
 _PEND, _READY, _RUN, _INT = 0, 1, 2, 3
@@ -145,7 +149,8 @@ class _VecProgram:
 # the old per-step jax candidate-select path it named was deleted — it
 # paid a host<->device hop per lockstep iteration for no gain)
 BACKENDS = ("numpy", "jit", "jax")
-DEMAND_PROFILES = ("sampled", "nominal")
+# DEMAND_PROFILES is canonically defined in core.simulator (the event
+# engine validates it too) and re-exported here for callers.
 
 
 # ----------------------------------------------------------------------
@@ -160,7 +165,7 @@ class _VecBatch:
                  programs: Dict[str, Program], policy: Policy, *,
                  seeds: Sequence[int], duration: float,
                  overrun_prob: float, cf: float,
-                 demand_profile: str = "sampled"):
+                 demand_profile: str = "sampled", scenario=None):
         P = len(tasksets)
         T = max(len(ts) for ts in tasksets)
         self.P, self.T = P, T
@@ -173,6 +178,7 @@ class _VecBatch:
         self.drop_lo = policy.drop_lo_in_hi
         self.preempt = policy.preemption           # instruction|operator|none
         self.demand_profile = demand_profile
+        self.scen = get_scenario(scenario)
 
         # ---- program table ------------------------------------------------
         prog_ids: Dict[int, int] = {}
@@ -222,6 +228,11 @@ class _VecBatch:
         self.blocked_since = np.full((P, T), np.nan)
         self.cause = z(np.int8)
         self.released_in_hi = z(bool)
+        # scenario state: absolute release-event counter per (point,
+        # task) — bumped on *every* release event (accepted, busy-
+        # missed or AMC-dropped), so scenario CRN draws keyed on it are
+        # identical across policies.  Unused (all-zero) with scen=None.
+        self.scen_n = z(np.int64)
         # accelerator state
         self.r_bytes = z(np.int64)       # remapper residency (use_banks)
         self.spad = z(np.int64)          # explicit-addressing residency
@@ -276,10 +287,18 @@ class _VecBatch:
         # ---- rng + release phases (same draw order as the event engine) --
         self.rngs = [np.random.default_rng(int(s)) for s in seeds]
         self.rands = [r.random for r in self.rngs]
+        self.seed64 = np.asarray(seeds, np.int64).astype(np.uint64)
+        scen = self.scen
+        shift = scen is not None and scen.has_phase_shift
         for p, ts in enumerate(tasksets):
             rng = self.rngs[p]
             for t, tp in enumerate(ts):
-                self.next_release[p, t] = rng.uniform(0, tp.period)
+                ph = rng.uniform(0, tp.period)
+                if shift:
+                    # same scalar path as the event engine's sampler
+                    ph = float(shifted_phases(scen, self.seed64[p],
+                                              np.uint64(t), ph, tp.period))
+                self.next_release[p, t] = ph
         self.rel_min = self.next_release.min(axis=1)
         # incremental total-locked-banks per point (sum of ceil(r/bb));
         # every r_bytes mutation below keeps it in sync
@@ -307,9 +326,9 @@ class _VecBatch:
                   "budget_overrun data_in_accel pc blocked_since cause "
                   "released_in_hi r_bytes spad acc_bytes ctx_valid ctx_acc "
                   "ctx_spad ctx_kept next_release tick_release "
-                  "ev_time ev_tid ev_kind prio_key").split()
+                  "ev_time ev_tid ev_kind prio_key scen_n").split()
     _P_ARRAYS = ("now mode running accel_free_at run_started "
-                 "last_mode_stamp tick_cs alive orig "
+                 "last_mode_stamp tick_cs alive orig seed64 "
                  "rel_min tickR_min ev_min locked "
                  "act_cnt hi_cnt act_key hi_key res_lo_cnt "
                  "jobs done misses misses_by_mode mode_cycles lo_rel_hi "
@@ -728,6 +747,10 @@ class _VecBatch:
         t = self.now[idx]
         self.next_release[idx, tcol] = t + self.period[idx, tcol]
         self.rel_min[idx] = self.next_release[idx].min(axis=1)
+        if self.scen is not None:
+            # absolute release-event counter (policy-independent CRN
+            # key); draws below use the pre-bump value
+            self.scen_n[idx, tcol] += 1
         st = self.status[idx, tcol]
         busy = (st != _PEND).nonzero()[0]
         if len(busy):
@@ -789,6 +812,12 @@ class _VecBatch:
                 else:
                     demands[k] = c * (0.7 + w_lo * rnd())
             self.demand[ap, at_] = demands
+        scen = self.scen
+        if scen is not None and scen.affects_demand:
+            n_pre = (self.scen_n[ap, at_] - 1).astype(np.uint64)
+            m = demand_multiplier(scen, np, self.seed64[ap],
+                                  at_.astype(np.uint64), n_pre, ta)
+            self.demand[ap, at_] = self.demand[ap, at_] * m
         self.jobs[ap, hi_a.astype(np.int64)] += 1
         rel_hi_mask = ~hi_a & (self.mode[ap] != _LO)
         self.released_in_hi[ap, at_] = rel_hi_mask
@@ -1015,7 +1044,8 @@ def simulate_vbatch(tasksets: Sequence[List[TaskParams]],
                     batch_size: int = 256,
                     select_backend: str = "numpy",
                     demand_profile: str = "sampled",
-                    devices: Optional[int] = None) -> List[RunMetrics]:
+                    devices: Optional[int] = None,
+                    scenario=None) -> List[RunMetrics]:
     """Vectorized batch counterpart of :func:`repro.core.simulator
     .simulate_batch`: one independent simulated point per (taskset,
     seed) pair, all points advanced in lockstep SoA batches.
@@ -1048,6 +1078,7 @@ def simulate_vbatch(tasksets: Sequence[List[TaskParams]],
         raise ValueError(
             f"unknown demand_profile {demand_profile!r}; "
             f"want one of {DEMAND_PROFILES}")
+    scen = get_scenario(scenario)          # loud on unknown names
     if len(tasksets) != len(seeds):
         raise ValueError(f"{len(tasksets)} tasksets vs {len(seeds)} seeds")
     if select_backend in ("jit", "jax"):
@@ -1066,7 +1097,7 @@ def simulate_vbatch(tasksets: Sequence[List[TaskParams]],
         return simulator_jit.simulate_jbatch(
             tasksets, programs, policy, seeds=seeds, duration=duration,
             overrun_prob=overrun_prob, cf=cf, batch_size=batch_size,
-            demand_profile=demand_profile, devices=devices)
+            demand_profile=demand_profile, devices=devices, scenario=scen)
     if devices is not None and devices != 1:
         raise ValueError(
             f"devices={devices} requires select_backend='jit' — the "
@@ -1078,6 +1109,7 @@ def simulate_vbatch(tasksets: Sequence[List[TaskParams]],
         chunk_seeds = list(seeds[lo:lo + batch_size])
         batch = _VecBatch(chunk_ts, programs, policy, seeds=chunk_seeds,
                           duration=duration, overrun_prob=overrun_prob,
-                          cf=cf, demand_profile=demand_profile)
+                          cf=cf, demand_profile=demand_profile,
+                          scenario=scen)
         out.extend(batch.run())
     return out

@@ -104,11 +104,14 @@ def _run_sim(point: SimPoint) -> Dict[str, Any]:
                             cf=point.cf,
                             select_backend="numpy" if point.engine == "vec"
                             else "jit",
-                            devices=point.devices)[0]
+                            devices=point.devices,
+                            demand_profile=point.demand_profile,
+                            scenario=point.scenario)[0]
     else:
         m = simulate(tasks, programs, policy, duration=point.duration,
                      seed=point.seed, overrun_prob=point.overrun_prob,
-                     cf=point.cf)
+                     cf=point.cf, demand_profile=point.demand_profile,
+                     scenario=point.scenario)
     return metrics_row(m, policy=policy.name, u=point.u, gamma=point.gamma,
                        n_tasks=point.n_tasks, set_index=point.set_index,
                        seed=point.seed)
@@ -148,14 +151,15 @@ def _execute_chunk(payloads: List[Dict[str, Any]]) -> List[Dict[str, Any]]:
         point = point_from_dict(d)
         if isinstance(point, SimPoint) and point.engine in ("vec", "jit"):
             key = (point.engine, point.policy, point.duration, point.cf,
-                   point.overrun_prob, point.library, point.devices)
+                   point.overrun_prob, point.library, point.devices,
+                   point.scenario, point.demand_profile)
             groups.setdefault(key, []).append((i, point))
         elif isinstance(point, FuncPoint):
             rows[i] = _run_func(point)
         else:
             rows[i] = _run_sim(point)
-    for (engine, pol_items, duration, cf, op, library, devices), items \
-            in groups.items():
+    for (engine, pol_items, duration, cf, op, library, devices,
+         scenario, demand_profile), items in groups.items():
         programs = cached_library(library)
         policy = policy_from_dict(dict(pol_items))
         tasksets = [_memo_taskset(pt.u, pt.gamma, pt.n_tasks, pt.cf,
@@ -166,7 +170,9 @@ def _execute_chunk(payloads: List[Dict[str, Any]]) -> List[Dict[str, Any]]:
                              batch_size=VEC_CHUNK,
                              select_backend="numpy" if engine == "vec"
                              else "jit",
-                             devices=devices)
+                             devices=devices,
+                             demand_profile=demand_profile,
+                             scenario=scenario)
         for (i, pt), m in zip(items, ms):
             rows[i] = metrics_row(
                 m, policy=policy.name, u=pt.u, gamma=pt.gamma,

@@ -31,12 +31,13 @@ import json
 from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
 
 from repro.core.scheduler import Policy
-from repro.core.simulator import SIM_SEMANTICS_VERSION
+from repro.core.simulator import DEMAND_PROFILES, SIM_SEMANTICS_VERSION
 # both engine salts live in (jax-free) simulator_vec: hashing a jit
 # point must not import JAX into every campaign worker
 from repro.core.simulator_vec import (JIT_SIM_SEMANTICS_VERSION,
                                       VEC_SIM_SEMANTICS_VERSION)
 from repro.core.taskgen import point_seed
+from repro.scenarios import get_scenario
 
 SPEC_VERSION = 1
 
@@ -76,6 +77,8 @@ class SimPoint:
     library: str = "sim"                  # 'sim' (no arch:*) | 'all'
     engine: str = "event"                 # 'event' | 'vec' | 'jit'
     devices: Optional[int] = None         # jit only: logical devices
+    scenario: Optional[str] = None        # scenarios.get_scenario name
+    demand_profile: str = "sampled"       # 'sampled' | 'nominal'
 
     kind = "sim"
 
@@ -103,6 +106,12 @@ class SimPoint:
         # see key(); omitting the default keeps old payloads identical
         if self.devices is None:
             d.pop("devices")
+        # scenario / demand_profile salt the key only when non-default,
+        # so every pre-scenario point hash stays byte-stable
+        if self.scenario is None:
+            d.pop("scenario")
+        if self.demand_profile == "sampled":
+            d.pop("demand_profile")
         return d
 
     @staticmethod
@@ -115,7 +124,9 @@ class SimPoint:
             overrun_prob=d["overrun_prob"],
             library=d.get("library", "sim"),
             engine=d.get("engine", "event"),
-            devices=d.get("devices"))
+            devices=d.get("devices"),
+            scenario=d.get("scenario"),
+            demand_profile=d.get("demand_profile", "sampled"))
 
     def key(self) -> str:
         # the sharded jit engine is bit-identical at every device count
@@ -180,6 +191,8 @@ class Sweep:
     library: str = "sim"
     engine: str = "event"                 # 'event' | 'vec' | 'jit'
     devices: Optional[int] = None         # jit only: logical devices
+    scenario: Optional[str] = None        # scenarios.get_scenario name
+    demand_profile: str = "sampled"       # 'sampled' | 'nominal'
 
     def __post_init__(self):
         names = [p.name for p in self.policies]
@@ -190,6 +203,14 @@ class Sweep:
         if self.engine not in ENGINES:
             raise ValueError(f"sweep {self.name!r}: unknown engine "
                              f"{self.engine!r}; want one of {ENGINES}")
+        if self.demand_profile not in DEMAND_PROFILES:
+            raise ValueError(
+                f"sweep {self.name!r}: unknown demand_profile "
+                f"{self.demand_profile!r}; want one of {DEMAND_PROFILES}")
+        try:
+            get_scenario(self.scenario)
+        except ValueError as e:
+            raise ValueError(f"sweep {self.name!r}: {e}") from None
         if self.devices is not None:
             if self.engine != "jit":
                 raise ValueError(
@@ -216,7 +237,9 @@ class Sweep:
                                 overrun_prob=self.overrun_prob,
                                 library=self.library,
                                 engine=self.engine,
-                                devices=self.devices))
+                                devices=self.devices,
+                                scenario=self.scenario,
+                                demand_profile=self.demand_profile))
         return out
 
     def to_dict(self) -> Dict[str, Any]:
@@ -228,6 +251,10 @@ class Sweep:
             d.pop("engine")
         if self.devices is None:          # keep pre-sharding hashes
             d.pop("devices")
+        if self.scenario is None:         # keep pre-scenario hashes
+            d.pop("scenario")
+        if self.demand_profile == "sampled":
+            d.pop("demand_profile")
         return d
 
     def spec_hash(self) -> str:

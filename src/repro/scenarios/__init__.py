@@ -1,0 +1,37 @@
+"""Declarative fault-injection / demand-profile scenario layer.
+
+Public surface:
+
+  * :class:`~repro.scenarios.scenario.Scenario` — frozen component
+    bundle (demand profiles: heavy-tail, correlated burst, phase
+    shift; faults: DMA stretch, thermal throttle, serving instance
+    loss);
+  * :data:`~repro.scenarios.scenario.SCENARIOS` /
+    :func:`~repro.scenarios.scenario.get_scenario` — the named
+    registry plus the parameterized ``faults@<intensity>`` family
+    (fig13's sweep axis), with loud validation;
+  * :func:`~repro.scenarios.scenario.demand_multiplier` and friends —
+    the xp-generic (numpy / jax.numpy) release-time arithmetic each
+    engine compiles in;
+  * :mod:`~repro.scenarios.crn` — the counter-based splitmix64 CRN
+    primitives scenario streams draw from.
+
+See docs/scenarios.md for the component model and the per-engine
+compilation story.
+"""
+from repro.scenarios.crn import (GOLD, counter, keyed_u01, mix64,
+                                 stream_salt, u01)
+from repro.scenarios.scenario import (SCENARIOS, Scenario,
+                                      burst_multiplier,
+                                      burst_window_index,
+                                      demand_multiplier, faults,
+                                      get_scenario, lane_lost,
+                                      next_loss_boundary,
+                                      shifted_phases)
+
+__all__ = [
+    "GOLD", "SCENARIOS", "Scenario", "burst_multiplier",
+    "burst_window_index", "counter", "demand_multiplier", "faults",
+    "get_scenario", "keyed_u01", "lane_lost", "mix64",
+    "next_loss_boundary", "shifted_phases", "stream_salt", "u01",
+]

@@ -37,6 +37,7 @@ import numpy as np
 from repro.core.scheduler import Policy
 from repro.core.serving import MultiLaneServer, Request
 from repro.core.task import Crit
+from repro.scenarios import get_scenario, lane_lost, next_loss_boundary
 from repro.serving.clock import VirtualClock
 from repro.serving.traffic import ArrivalSpec, crn_u01
 
@@ -198,6 +199,7 @@ def drive_open_loop(server: MultiLaneServer,
                     workload: Sequence[ArrivalSpec],
                     front: FrontDoor, *,
                     max_steps: int = 5_000_000,
+                    scenario=None, seed: int = 0,
                     on_step: Optional[Callable[[FrontDoor, Any], None]]
                     = None) -> Dict[int, Request]:
     """Serve an open-loop workload to completion on the virtual clock.
@@ -210,18 +212,42 @@ def drive_open_loop(server: MultiLaneServer,
     instruction (= decode step); on an empty system all clocks jump to
     the next arrival.  ``on_step`` (tests) observes the front door
     after every iteration.
+
+    A ``scenario`` with the instance-loss component shrinks the live
+    lane set: a lane inside a keyed outage window (``lane_lost``, drawn
+    per (seed, lane, window) — the realization is policy-independent)
+    neither starts new work (``server.blocked_lanes`` steers the
+    partitioner away) nor steps, so its in-flight requests stall and
+    its clock rides forward with the pool.  When *no* lane is
+    steppable, all clocks jump to the next instant anything can change
+    — the next arrival or the next outage-window boundary — and
+    admission is held while every lane is lost (requests conserve at
+    the front door).  With ``scenario=None`` (or a scenario without the
+    loss component) the loop is byte-identical to the scenario-free
+    driver.
     """
+    scen = get_scenario(scenario)
+    if scen is not None and not scen.has_loss:
+        scen = None        # only instance loss acts at the serving layer
     pending = deque(sorted(workload, key=lambda s: (s.t, s.rid)))
     lanes = server.lanes
     for _ in range(max_steps):
         busy = [i for i, ln in enumerate(lanes) if _lane_live(ln)]
         if not busy and not pending and not front.queued:
             break
-        if busy:
-            i = min(busy, key=lambda j: (clocks[j](), j))
+        if scen is not None:
+            lost = {j for j in range(len(lanes))
+                    if lane_lost(scen, seed, j, clocks[j]())}
+            server.blocked_lanes = lost
+            steppable = [j for j in busy if j not in lost]
+        else:
+            lost = set()
+            steppable = busy
+        if steppable:
+            i = min(steppable, key=lambda j: (clocks[j](), j))
             now = clocks[i]()
-            for j, ln in enumerate(lanes):      # idle lanes ride along
-                if j not in busy:
+            for j, ln in enumerate(lanes):      # idle and lost lanes
+                if j not in steppable:          # ride along
                     clocks[j].advance_to(now)
             while pending and pending[0].t <= now:
                 front.arrive(pending.popleft())
@@ -229,14 +255,23 @@ def drive_open_loop(server: MultiLaneServer,
             lanes[i].step()
             front.pump()                        # a finish frees capacity
         else:
-            # whole pool idle: jump to the next arrival (queued-but-
-            # unadmittable implies live work, so pending is non-empty)
-            t = pending[0].t
+            # nothing steppable: jump to the next instant anything can
+            # change — the next arrival, or (with work stalled behind
+            # an outage) the next loss-window boundary
+            t = pending[0].t if pending else np.inf
+            if scen is not None and (busy or front.queued):
+                t = min(t, next_loss_boundary(
+                    scen, min(c() for c in clocks)))
             for c in clocks:
                 c.advance_to(t)
             while pending and pending[0].t <= t:
                 front.arrive(pending.popleft())
-            front.pump()
+            if scen is not None:
+                lost = {j for j in range(len(lanes))
+                        if lane_lost(scen, seed, j, clocks[j]())}
+                server.blocked_lanes = lost
+            if len(lost) < len(lanes):          # hold admission while
+                front.pump()                    # every lane is lost
         if on_step is not None:
             on_step(front, server)
     else:
@@ -260,6 +295,7 @@ def run_virtual_serving(workload: Sequence[ArrivalSpec], *,
                         slots_per_lane: int = 2,
                         max_live_lo: Optional[int] = None,
                         max_steps: int = 5_000_000,
+                        scenario=None,
                         on_step: Optional[Callable] = None,
                         ) -> Dict[int, Request]:
     """One fully deterministic serving run: workload in, finished
@@ -284,7 +320,8 @@ def run_virtual_serving(workload: Sequence[ArrivalSpec], *,
         cs_costs=(cs_save_s, cs_restore_s))
     front = FrontDoor(server, max_live_lo=max_live_lo)
     return drive_open_loop(server, vclocks, workload, front,
-                           max_steps=max_steps, on_step=on_step)
+                           max_steps=max_steps, scenario=scenario,
+                           seed=seed, on_step=on_step)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -97,6 +97,7 @@ class EngineCase:
     chunk: Optional[int] = None
     table_width: Optional[int] = None
     demand_profile: str = "sampled"
+    scenario: Optional[str] = None       # scenarios.get_scenario name
 
     def __str__(self) -> str:            # pytest id
         return self.name
@@ -110,11 +111,13 @@ def run_case(case: EngineCase, tasksets, seeds, policy, *,
         if case.demand_profile != "sampled":
             raise ValueError("event engine has no demand_profile knob")
         return rows(simulate(ts, LIB, policy, seed=s, duration=duration,
-                             overrun_prob=overrun_prob, cf=cf)
+                             overrun_prob=overrun_prob, cf=cf,
+                             scenario=case.scenario)
                     for ts, s in zip(tasksets, seeds))
     kw: Dict[str, Any] = dict(seeds=seeds, duration=duration,
                               overrun_prob=overrun_prob, cf=cf,
-                              demand_profile=case.demand_profile)
+                              demand_profile=case.demand_profile,
+                              scenario=case.scenario)
     if case.engine == "jit":
         kw["select_backend"] = "jit"
         kw["devices"] = case.devices
@@ -210,6 +213,7 @@ class ServingCase:
     heuristic: str = "crit_aware"
     max_live_lo: Optional[int] = None
     hi_deadline_s: float = 0.5
+    scenario: Optional[str] = None       # instance-loss component only
 
     def __str__(self) -> str:            # pytest id
         return self.name
@@ -248,7 +252,8 @@ def run_serving_case(case: ServingCase,
     reqs = run_virtual_serving(
         workload, lanes=case.lanes, policy=POLICIES[case.policy](),
         seed=case.seed, heuristic=case.heuristic,
-        max_live_lo=case.max_live_lo, on_step=on_step)
+        max_live_lo=case.max_live_lo, scenario=case.scenario,
+        on_step=on_step)
     out: List[Dict[str, Any]] = []
     for rid in sorted(reqs):
         r = reqs[rid]

@@ -155,7 +155,7 @@ class TestShardedBitExactness:
         calls = []
 
         def run_once(b, policy, seeds, duration, op, cf, nominal, K,
-                     devices=1):
+                     devices=1, scenario=None):
             calls.append((K, devices))
             return {"overflow": [K <= sj._K0] * len(seeds),
                     "seeds": list(seeds)}
@@ -213,9 +213,10 @@ class TestSuiteFloor:
 
     # pre-refactor test-function counts of the migrated modules
     # (test_serving pinned post-ServingCase refactor: the 7 real-model
-    # tests plus the 6 virtual-clock harness tests)
+    # tests plus the 6 virtual-clock harness tests; test_scenarios
+    # pinned at its PR-8 landing size)
     FLOORS = {"test_simulator_jit": 23, "test_simulator_vec": 19,
-              "test_serving": 13}
+              "test_serving": 13, "test_scenarios": 18}
 
     @pytest.mark.parametrize("module,floor", sorted(FLOORS.items()))
     def test_migrated_module_keeps_its_tests(self, module, floor):

@@ -153,7 +153,7 @@ class TestOverflowRetryLadder:
         calls = []
 
         def run_once(b, policy, seeds, duration, op, cf, nominal, K,
-                     devices=1):
+                     devices=1, scenario=None):
             # odd-seed points overflow the primary table width only
             calls.append((list(seeds), K))
             return {"overflow": np.array([K <= sj._K0 and s % 2 == 1
@@ -182,7 +182,7 @@ class TestOverflowRetryLadder:
         monkeypatch.setattr(
             sj, "_run_once",
             lambda b, policy, seeds, duration, op, cf, nominal, K,
-            devices=1:
+            devices=1, scenario=None:
             {"overflow": np.ones(b.P, bool), "seeds": list(seeds)})
         monkeypatch.setattr(
             sj, "_assemble", lambda b, final, duration: [None] * b.P)
