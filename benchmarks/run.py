@@ -132,7 +132,7 @@ def main() -> None:
         try:
             table[name](full=args.full, engine=args.engine,
                         devices=args.devices, **kw)
-        except Exception as e:  # keep the harness going
+        except Exception as e:  # repro-lint: disable=except-breadth (CLI boundary: one broken figure must not kill the sweep; the error lands in the CSV row)
             print(f"{name},0,ERROR:{type(e).__name__}:{e}")
 
 

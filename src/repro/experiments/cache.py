@@ -25,8 +25,23 @@ from typing import Any, Dict, List, Optional
 DEFAULT_CACHE_DIR = "results/campaigns"
 
 
+def _env_path(name: str, default: str) -> Path:
+    """Read a directory-path env override, rejecting junk loudly.
+
+    A blank-but-set variable almost always means a broken launch
+    script; failing at startup beats silently caching into ``.``.
+    """
+    raw = os.environ.get(name)
+    if raw is None:
+        return Path(default)
+    if not raw.strip():
+        raise ValueError(
+            f"{name} is set but blank; set a directory path or unset it")
+    return Path(raw)
+
+
 def default_cache_dir() -> Path:
-    return Path(os.environ.get("REPRO_CACHE_DIR", DEFAULT_CACHE_DIR))
+    return _env_path("REPRO_CACHE_DIR", DEFAULT_CACHE_DIR)
 
 
 class ResultCache:

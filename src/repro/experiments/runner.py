@@ -49,6 +49,7 @@ from repro.experiments.cache import ResultCache
 from repro.experiments.metrics import ensure_row_means, metrics_row
 from repro.experiments.spec import (FuncPoint, FuncSweep, SimPoint, Sweep,
                                     point_from_dict, policy_from_dict)
+from repro.runtime.device_config import _env_int
 
 # max points per vectorized chunk: wide batches amortize the lockstep
 # overhead (hundreds of points per argmin), and one chunk is one unit
@@ -57,10 +58,9 @@ VEC_CHUNK = 512
 
 
 def default_workers() -> int:
-    env = os.environ.get("REPRO_WORKERS")
-    if env:
-        return max(int(env), 1)
-    return max(os.cpu_count() or 1, 1)
+    """Worker-pool width: ``REPRO_WORKERS`` (validated — junk or
+    non-positive values raise naming the variable) or the CPU count."""
+    return _env_int("REPRO_WORKERS", max(os.cpu_count() or 1, 1))
 
 
 @functools.lru_cache(maxsize=None)

@@ -1,23 +1,26 @@
+"""Multi-pod dry-run: lower + compile every (architecture x shape x
+mesh) cell, print memory/cost analysis, and dump roofline raw terms to
+JSON.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b \\
+        --shape train_4k [--multi-pod]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+Success criterion (deliverable e): ``.lower().compile()`` succeeds and
+the per-device memory fits a v5e (16 GB) for every supported cell.
+"""
 import os
 os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
                            + " --xla_force_host_platform_device_count=512")
-# The two lines above MUST run before any other import (jax locks the device
-# count on first backend initialisation).
-
-# Multi-pod dry-run: lower + compile every (architecture x shape x mesh)
-# cell, print memory/cost analysis, and dump roofline raw terms to JSON.
-#
-# Usage:
-#   PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b \
-#       --shape train_4k [--multi-pod]
-#   PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
-#
-# Success criterion (deliverable e): .lower().compile() succeeds and the
-# per-device memory fits a v5e (16 GB) for every supported cell.
+# The XLA_FLAGS write above MUST run before any other import (jax locks
+# the device count on first backend initialisation).
 
 import argparse
 import json
 import re
+import sys
 import time
 import traceback
 from pathlib import Path
@@ -36,6 +39,16 @@ from repro.runtime.trainer import (make_decode_step, make_prefill_step,
                                    make_train_step)
 
 RESULTS_DIR = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+# Failures one analysis probe may survive (recorded per-cell, never
+# fatal to the sweep): jax/XLA API drift or an unsupported query on
+# this backend.  XlaRuntimeError subclasses RuntimeError.
+PROBE_ERRORS = (AttributeError, KeyError, TypeError, ValueError,
+                RuntimeError)
+# Failures one *cell* may survive — lowering/compile blowups land in
+# the cell's JSON record and the sweep moves on.  Genuine bugs
+# (NameError, ImportError) and KeyboardInterrupt still propagate.
+CELL_ERRORS = PROBE_ERRORS + (MemoryError, OSError)
 
 # --------------------------------------------------------------------------
 # Per-cell runtime policy (baseline; §Perf hillclimbs override these)
@@ -158,8 +171,10 @@ def analyze(lowered, mesh) -> dict:
             + res.get("output_size_in_bytes", 0)
             + res.get("temp_size_in_bytes", 0)
             - res.get("alias_size_in_bytes", 0))
-    except Exception as e:  # pragma: no cover
+    except PROBE_ERRORS as e:  # pragma: no cover
         res["memory_analysis_error"] = str(e)
+        print(f"dryrun: memory_analysis failed: {type(e).__name__}: {e}",
+              file=sys.stderr)
 
     try:
         ca = compiled.cost_analysis()
@@ -168,8 +183,10 @@ def analyze(lowered, mesh) -> dict:
         res["hlo_flops"] = float(ca.get("flops", 0.0))
         res["hlo_bytes"] = float(ca.get("bytes accessed", 0.0))
         res["hlo_transcendentals"] = float(ca.get("transcendentals", 0.0))
-    except Exception as e:  # pragma: no cover
+    except PROBE_ERRORS as e:  # pragma: no cover
         res["cost_analysis_error"] = str(e)
+        print(f"dryrun: cost_analysis failed: {type(e).__name__}: {e}",
+              file=sys.stderr)
 
     try:
         txt = compiled.as_text()
@@ -179,8 +196,10 @@ def analyze(lowered, mesh) -> dict:
         res["hlo_text_bytes_no_copies"] = h["hbm_bytes_no_copies"]
         res["collectives"] = h["collectives"]
         res["collective_link_bytes"] = h["collective_link_bytes"]
-    except Exception as e:  # pragma: no cover
+    except PROBE_ERRORS as e:  # pragma: no cover
         res["collective_parse_error"] = str(e)
+        print(f"dryrun: HLO text analysis failed: {type(e).__name__}: {e}",
+              file=sys.stderr)
     return res
 
 
@@ -258,12 +277,16 @@ def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
         rec.update(analyze(lowered, mesh))
         try:
             rec.update(cost_probe(arch_name, shape_name))
-        except Exception as e:  # probe is best-effort
+        except PROBE_ERRORS as e:  # probe is best-effort
             rec["probe_error"] = f"{type(e).__name__}: {e}"
-    except Exception as e:
+            print(f"dryrun: {tag}: cost probe failed: {rec['probe_error']}",
+                  file=sys.stderr)
+    except CELL_ERRORS as e:
         rec["status"] = "error"
         rec["error"] = f"{type(e).__name__}: {e}"
         rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"dryrun: {tag}: cell failed: {rec['error']}",
+              file=sys.stderr)
     out_path.write_text(json.dumps(rec, indent=2))
     return rec
 

@@ -1,12 +1,16 @@
+"""Perf hillclimbing harness: lower/compile named VARIANTS of the three
+chosen cells and record the roofline terms for the
+hypothesis -> change -> measure -> validate loop (EXPERIMENTS.md SSPerf).
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.perf --cell qwen_train --variant mb2
+"""
 import os
 os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
                            + " --xla_force_host_platform_device_count=512")
-
-# SSPerf hillclimbing harness: lower/compile named VARIANTS of the three
-# chosen cells and record the roofline terms for the
-# hypothesis -> change -> measure -> validate loop (EXPERIMENTS.md SSPerf).
-#
-#   PYTHONPATH=src python -m repro.launch.perf --cell qwen_train --variant mb2
+# The XLA_FLAGS write above MUST run before any other import (jax locks
+# the device count on first backend initialisation).
 
 import argparse
 import dataclasses

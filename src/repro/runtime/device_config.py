@@ -89,9 +89,14 @@ def jax_initialized() -> bool:
     try:
         from jax._src import xla_bridge
         return xla_bridge.backends_are_initialized()
-    except Exception:  # pragma: no cover - jax-internal API drift
-        # conservative: assume live so callers warn rather than claim
-        # a reconfiguration that cannot take effect
+    except (ImportError, AttributeError) as e:  # pragma: no cover
+        # jax-internal API drift: assume live so callers warn rather
+        # than claim a reconfiguration that cannot take effect
+        warnings.warn(
+            f"cannot query JAX backend state ({type(e).__name__}: {e}); "
+            "assuming a backend is already initialized — device/platform "
+            "reconfiguration is skipped for this process",
+            RuntimeWarning, stacklevel=2)
         return True
 
 

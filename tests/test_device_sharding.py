@@ -216,7 +216,8 @@ class TestSuiteFloor:
     # tests plus the 6 virtual-clock harness tests; test_scenarios
     # pinned at its PR-8 landing size)
     FLOORS = {"test_simulator_jit": 23, "test_simulator_vec": 19,
-              "test_serving": 13, "test_scenarios": 18}
+              "test_serving": 13, "test_scenarios": 18,
+              "test_lint": 20}
 
     @pytest.mark.parametrize("module,floor", sorted(FLOORS.items()))
     def test_migrated_module_keeps_its_tests(self, module, floor):
@@ -227,3 +228,9 @@ class TestSuiteFloor:
                 for name in vars(cls) if name.startswith("test_"))
         assert n >= floor, \
             f"{module} has {n} test functions, refactor floor {floor}"
+
+    def test_lint_rule_registry_never_shrinks(self):
+        # dropping a lint rule silently un-guards a repo contract;
+        # removal must be a conscious, test-visible decision
+        from tools.lint import RULES
+        assert len(RULES) >= 9, sorted(RULES)

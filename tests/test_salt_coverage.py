@@ -1,0 +1,124 @@
+"""Every ``*_SEMANTICS_VERSION`` salt reaches the cache keys it
+protects, and the lint pin registry knows about all of them.
+
+Three layers of guarantee:
+
+  * discovery — AST-scan ``core/`` and ``serving/`` for salt
+    constants; a newly added salt that is not registered in
+    ``tools/lint/salts.json`` (and therefore not drift-pinned) fails
+    here before it can silently serve stale cache entries;
+  * emission — ``SimPoint.to_dict`` carries the right engine salt per
+    engine (event: ``sim_v`` only; vec/jit: plus their own), fig11's
+    FuncSweep items carry BOTH shared-path salts, and fig12's items
+    carry ``serving_v`` (the SERVING salt's only route into keys);
+  * sensitivity — the serialized dicts embed the salts by value, so
+    any bump changes every affected content hash.
+"""
+import ast
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.core.simulator import (MULTI_SIM_SEMANTICS_VERSION,
+                                  SIM_SEMANTICS_VERSION)
+from repro.core.simulator_vec import (JIT_SIM_SEMANTICS_VERSION,
+                                      VEC_SIM_SEMANTICS_VERSION)
+from repro.experiments.spec import Policy, Sweep
+from repro.serving.fig12 import SERVING_SEMANTICS_VERSION
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def declared_salts():
+    """name -> (module rel-path, int value) for every module-level
+    ``*_SEMANTICS_VERSION`` constant under core/ and serving/."""
+    out = {}
+    for pkg in ("core", "serving"):
+        for path in sorted((REPO / "src" / "repro" / pkg).glob("*.py")):
+            tree = ast.parse(path.read_text(encoding="utf-8"))
+            for node in tree.body:
+                if not isinstance(node, ast.Assign):
+                    continue
+                for t in node.targets:
+                    if isinstance(t, ast.Name) and \
+                            t.id.endswith("_SEMANTICS_VERSION") and \
+                            isinstance(node.value, ast.Constant) and \
+                            isinstance(node.value.value, int):
+                        rel = path.relative_to(REPO).as_posix()
+                        # simulator_jit re-exports the vec-defined
+                        # salt; only true definitions count
+                        out.setdefault(t.id, (rel, node.value.value))
+    return out
+
+
+class TestSaltRegistry:
+    def test_every_declared_salt_is_drift_pinned(self):
+        pins = json.loads(
+            (REPO / "tools/lint/salts.json").read_text())["salts"]
+        declared = declared_salts()
+        assert set(declared) == set(pins), (
+            "salt constants and tools/lint/salts.json disagree — a new "
+            "*_SEMANTICS_VERSION must be registered (with its semantic "
+            "surface) so salt-drift can pin it")
+        for name, (rel, value) in declared.items():
+            assert pins[name]["defined_in"] == rel, name
+            assert pins[name]["value"] == value, name
+
+    def test_expected_salt_population(self):
+        assert set(declared_salts()) == {
+            "SIM_SEMANTICS_VERSION", "MULTI_SIM_SEMANTICS_VERSION",
+            "VEC_SIM_SEMANTICS_VERSION", "JIT_SIM_SEMANTICS_VERSION",
+            "SERVING_SEMANTICS_VERSION"}
+
+
+def _point(engine):
+    return Sweep(name="t", policies=(Policy.mesc(),), n_sets=1,
+                 duration=1e6, engine=engine).points()[0]
+
+
+class TestSimPointEmission:
+    def test_event_points_carry_sim_salt_only(self):
+        d = _point("event").to_dict()
+        assert d["sim_v"] == SIM_SEMANTICS_VERSION
+        assert "engine" not in d          # legacy-key compatibility
+        assert "vec_sim_v" not in d and "jit_sim_v" not in d
+
+    def test_vec_points_add_the_vec_salt(self):
+        d = _point("vec").to_dict()
+        assert d["sim_v"] == SIM_SEMANTICS_VERSION
+        assert d["vec_sim_v"] == VEC_SIM_SEMANTICS_VERSION
+        assert d["engine"] == "vec" and "jit_sim_v" not in d
+
+    def test_jit_points_add_the_jit_salt(self):
+        d = _point("jit").to_dict()
+        assert d["sim_v"] == SIM_SEMANTICS_VERSION
+        assert d["jit_sim_v"] == JIT_SIM_SEMANTICS_VERSION
+        assert d["engine"] == "jit" and "vec_sim_v" not in d
+
+    @pytest.mark.parametrize("engine", ["event", "vec", "jit"])
+    def test_keys_differ_across_engines(self, engine):
+        assert len({_point(e).key()
+                    for e in ("event", "vec", "jit")}) == 3
+
+
+class TestFuncSweepEmission:
+    def test_fig11_items_carry_both_shared_path_salts(self):
+        from benchmarks.fig11_multiacc import sweep
+        pts = sweep(full=False).points()
+        assert pts, "fig11 sweep is empty"
+        for p in pts:
+            kw = dict(p.kwargs)
+            assert kw["sim_v"] == [SIM_SEMANTICS_VERSION,
+                                   MULTI_SIM_SEMANTICS_VERSION]
+            assert kw["sim_v"] == p.to_dict()["kwargs"]["sim_v"]
+
+    def test_fig12_items_carry_the_serving_salt(self):
+        from benchmarks.fig12_serving_slo import sweep
+        pts = sweep(2).points()
+        assert pts, "fig12 sweep is empty"
+        for p in pts:
+            kw = dict(p.kwargs)
+            assert kw["serving_v"] == SERVING_SEMANTICS_VERSION
+            assert p.to_dict()["kwargs"]["serving_v"] == \
+                SERVING_SEMANTICS_VERSION

@@ -1,0 +1,2 @@
+"""Repo tooling namespace (``tools.lint`` is the static-analysis
+entry point; see docs/linting.md)."""

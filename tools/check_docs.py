@@ -1,82 +1,26 @@
-"""Docs lint for CI: broken intra-repo markdown links + missing module
-docstrings.
+"""Deprecated shim: the docs checks live in the lint framework now.
 
-Checks (both fail the build):
+The standalone checker this file used to contain was migrated into
+``tools/lint`` as the ``doc-link`` and ``module-docstring`` rules (with
+wider docstring coverage: serving/, scenarios/, runtime/ and launch/
+joined core/ and experiments/).  This entry point survives so older CI
+configs and habits keep working — it simply runs those two rules over
+the default lint surface:
 
-1. every relative link target in any tracked ``*.md`` file resolves to
-   an existing file/directory (anchors stripped; http(s)/mailto links
-   are ignored);
-2. every public module under ``src/repro/core/`` and
-   ``src/repro/experiments/`` carries a real module docstring (the
-   architecture docs promise each names the paper section it
-   implements).
+    python tools/check_docs.py
+    # equivalent to:
+    python -m tools.lint --rules doc-link,module-docstring
 
-Run from the repo root: ``python tools/check_docs.py``.
+Prefer ``python -m tools.lint`` (all rules) going forward.
 """
 from __future__ import annotations
 
-import ast
-import re
 import sys
 from pathlib import Path
 
-ROOT = Path(__file__).resolve().parent.parent
-SKIP_DIRS = {".git", "results", "__pycache__", ".pytest_cache",
-             "build", "dist"}
-LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
-DOCSTRING_DIRS = ("src/repro/core", "src/repro/experiments")
-MIN_DOCSTRING_CHARS = 40
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
-
-def md_files():
-    for p in sorted(ROOT.rglob("*.md")):
-        if not any(part in SKIP_DIRS for part in p.parts):
-            yield p
-
-
-def check_links() -> list[str]:
-    errors = []
-    for md in md_files():
-        for target in LINK_RE.findall(md.read_text(encoding="utf-8")):
-            if target.startswith(("http://", "https://", "mailto:", "#")):
-                continue
-            path = target.split("#", 1)[0]
-            if not path:
-                continue
-            resolved = (md.parent / path).resolve()
-            if not resolved.exists():
-                errors.append(f"{md.relative_to(ROOT)}: broken link "
-                              f"-> {target}")
-    return errors
-
-
-def check_docstrings() -> list[str]:
-    errors = []
-    for d in DOCSTRING_DIRS:
-        for py in sorted((ROOT / d).glob("*.py")):
-            if py.name.startswith("_") and py.name != "__init__.py":
-                continue                      # private helpers exempt
-            tree = ast.parse(py.read_text(encoding="utf-8"))
-            doc = ast.get_docstring(tree)
-            if not doc or len(doc) < MIN_DOCSTRING_CHARS:
-                errors.append(
-                    f"{py.relative_to(ROOT)}: missing or too-short "
-                    f"module docstring (< {MIN_DOCSTRING_CHARS} chars)")
-    return errors
-
-
-def main() -> int:
-    errors = check_links() + check_docstrings()
-    for e in errors:
-        print(f"FAIL {e}")
-    if errors:
-        print(f"{len(errors)} docs problem(s)")
-        return 1
-    n_md = sum(1 for _ in md_files())
-    print(f"docs OK: {n_md} markdown files, all links resolve, "
-          f"all public core/experiments modules documented")
-    return 0
-
+from tools.lint.__main__ import main  # noqa: E402
 
 if __name__ == "__main__":
-    sys.exit(main())
+    sys.exit(main(["--rules", "doc-link,module-docstring"]))

@@ -1,0 +1,13 @@
+"""repro-lint: AST-based static analysis mechanizing the repo's
+reproducibility contracts (determinism, CRN draws, cache salts,
+injected clocks, xp-genericity, loud env validation).
+
+Entry points:
+
+  * CLI — ``python -m tools.lint [paths]`` (see docs/linting.md);
+  * API — :func:`tools.lint.core.run_lint` plus the registry
+    :data:`tools.lint.core.RULES` (populated by importing
+    ``tools.lint.rules``).
+"""
+from tools.lint.core import (RULES, Context, Finding, Report, Rule,  # noqa: F401
+                             run_lint)

@@ -1,0 +1,98 @@
+"""CLI for repro-lint: ``python -m tools.lint [paths ...]``.
+
+Exit codes: 0 clean, 1 findings, 2 bad invocation/configuration.
+See docs/linting.md for the rule catalog and workflows.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from tools.lint.core import (DEFAULT_BASELINE, DEFAULT_PATHS, RULES,
+                             LintConfigError, run_lint,
+                             write_baseline)
+from tools.lint.rules.salt_drift import update_salts
+
+
+def default_root() -> Path:
+    """The repo root: this file lives at <root>/tools/lint/."""
+    return Path(__file__).resolve().parents[2]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.lint",
+        description="AST-based contract checker for the repo's "
+                    "determinism, CRN and cache-salt invariants")
+    ap.add_argument("paths", nargs="*",
+                    help="files/dirs to lint (default: "
+                         f"{' '.join(DEFAULT_PATHS)})")
+    ap.add_argument("--root", type=Path, default=None,
+                    help="repo root (default: auto-detected)")
+    ap.add_argument("--format", choices=("human", "json"),
+                    default="human")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule subset")
+    ap.add_argument("--baseline", type=Path, default=None,
+                    help=f"baseline file (default: {DEFAULT_BASELINE})")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="report grandfathered findings too")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="grandfather the current findings and exit 0")
+    ap.add_argument("--update-salts", action="store_true",
+                    help="re-pin tools/lint/salts.json surface hashes")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    root = (args.root or default_root()).resolve()
+    try:
+        if args.list_rules:
+            import tools.lint.rules  # noqa: F401
+            for name in sorted(RULES):
+                print(f"{name:18s} {RULES[name].contract}")
+            return 0
+
+        if args.update_salts:
+            changed = update_salts(root)
+            print(f"salts re-pinned: {len(changed)} changed "
+                  f"({', '.join(changed) or 'none'})")
+            return 0
+
+        rule_names = (args.rules.split(",") if args.rules else None)
+        report, ctx = run_lint(
+            root, args.paths, rule_names=rule_names,
+            baseline_path=args.baseline,
+            use_baseline=not (args.no_baseline or args.write_baseline))
+
+        if args.write_baseline:
+            bpath = args.baseline or (root / DEFAULT_BASELINE)
+            n = write_baseline(bpath, report.findings, ctx)
+            print(f"baseline written: {bpath} "
+                  f"({n} entries, {len(report.findings)} findings)")
+            return 0
+    except LintConfigError as e:
+        print(f"repro-lint: error: {e}", file=sys.stderr)
+        return 2
+
+    if args.format == "json":
+        print(json.dumps(report.to_json(), indent=1, sort_keys=True))
+        return report.exit_code
+
+    for f in report.findings:
+        print(f"{f.location()}: {f.rule}: {f.message}")
+    for e in report.stale_baseline:
+        print(f"note: stale baseline entry {e['fp']} "
+              f"({e['rule']} @ {e['path']}, {e['count']} unmatched) — "
+              "regenerate with --write-baseline")
+    n = len(report.findings)
+    print(f"repro-lint: {report.checked_files} files, "
+          f"{len(report.rules_run)} rules: "
+          f"{n} finding(s), {len(report.baselined)} baselined, "
+          f"{len(report.suppressed)} pragma-suppressed")
+    return report.exit_code
+
+
+if __name__ == "__main__":
+    sys.exit(main())

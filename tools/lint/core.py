@@ -1,0 +1,439 @@
+"""repro-lint framework core: rule registry, file walking, pragma
+suppression, baseline accounting, and the lint runner.
+
+The repo's reproducibility guarantees (counter-based CRN draws,
+injected clocks, semantics-version cache salts, xp-generic scenario
+code, loud env validation) are *conventions* — each was violated once
+and fixed by hand before this tool existed (see docs/linting.md for
+the rule-by-rule history).  This framework mechanizes them:
+
+  * a :class:`Rule` inspects Python ASTs (or markdown text) and emits
+    :class:`Finding` rows; rules register themselves into
+    :data:`RULES` at import time (``tools.lint.rules``);
+  * per-line ``# repro-lint: disable=<rule>[,<rule>]`` pragmas
+    suppress findings where the violation is justified in place;
+  * a committed baseline (``tools/lint/baseline.json``) grandfathers
+    pre-existing findings by line-content fingerprint, so the tool can
+    gate CI at zero *new* findings without a flag-day cleanup;
+  * :func:`run_lint` returns a :class:`Report`; the CLI lives in
+    ``tools.lint.__main__`` (``python -m tools.lint [paths]``).
+
+Everything here is stdlib-only: the lint job must run without jax,
+numpy, or an installed package (CI runs it before ``pip install``).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import hashlib
+import json
+import re
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+#: directory components never descended into during a directory walk
+#: (explicit file arguments are always linted — that is how the test
+#: suite points the tool at the deliberately-violating fixtures under
+#: ``tools/lint/testdata/``)
+EXCLUDE_PARTS = {".git", "__pycache__", ".pytest_cache", "results",
+                 "build", "dist", ".eggs", "node_modules", "testdata"}
+
+#: suffixes the walker collects; rules narrow further via ``suffixes``
+LINT_SUFFIXES = (".py", ".md")
+
+#: default lint surface when the CLI is given no paths: the acceptance
+#: surface (src/tools/benchmarks) plus the documentation tree, so the
+#: doc rules keep the coverage the standalone check_docs.py had
+DEFAULT_PATHS = ("src", "tools", "benchmarks", "docs", "README.md",
+                 "ROADMAP.md", "CHANGES.md")
+
+DEFAULT_BASELINE = Path("tools/lint/baseline.json")
+
+PRAGMA_RE = re.compile(r"#\s*repro-lint:\s*disable=([A-Za-z0-9_,\s-]+)")
+
+BASELINE_VERSION = 1
+
+
+class LintConfigError(Exception):
+    """Bad invocation or broken lint configuration (exit code 2)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at one location.
+
+    ``line`` is 1-based; 0 marks a file- or repo-level finding (salt
+    pins, missing docstrings) that no line pragma can suppress.
+    """
+    rule: str
+    path: str          # root-relative posix path
+    line: int
+    message: str
+
+    def location(self) -> str:
+        return f"{self.path}:{self.line}" if self.line else self.path
+
+
+class Source:
+    """One file handed to rules: text, split lines, lazy Python AST."""
+
+    def __init__(self, root: Path, path: Path):
+        self.path = path
+        try:
+            self.rel = path.relative_to(root).as_posix()
+        except ValueError:
+            self.rel = path.as_posix()
+        self.text = path.read_text(encoding="utf-8")
+        self.lines = self.text.splitlines()
+        self._tree: Optional[ast.Module] = None
+        self.parse_error: Optional[SyntaxError] = None
+
+    @property
+    def tree(self) -> ast.Module:
+        if self._tree is None:
+            self._tree = ast.parse(self.text)
+        return self._tree
+
+    def line_text(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1]
+        return ""
+
+
+class Context:
+    """Run-wide state shared by rules: the repo root, the selected
+    files, and a parse cache for off-selection files (salt surfaces,
+    registry definitions)."""
+
+    def __init__(self, root: Path, files: Sequence[Path]):
+        self.root = Path(root).resolve()
+        self.files = list(files)
+        self._sources: Dict[Path, Source] = {}
+
+    def source(self, path: Path) -> Source:
+        path = Path(path)
+        if not path.is_absolute():
+            path = self.root / path
+        path = path.resolve()
+        if path not in self._sources:
+            self._sources[path] = Source(self.root, path)
+        return self._sources[path]
+
+    def selected(self, suffixes: Tuple[str, ...]) -> Iterable[Source]:
+        for f in self.files:
+            if f.suffix in suffixes:
+                yield self.source(f)
+
+
+class Rule:
+    """Base rule: subclass, set ``name``/``contract``, implement
+    ``check_source`` (per selected file) and/or ``check_repo`` (once
+    per run, for rules whose surface is fixed repo state rather than
+    the CLI selection)."""
+
+    name: str = ""
+    contract: str = ""
+    suffixes: Tuple[str, ...] = (".py",)
+
+    def check_source(self, src: Source,
+                     ctx: Context) -> Iterable[Finding]:
+        return ()
+
+    def check_repo(self, ctx: Context) -> Iterable[Finding]:
+        return ()
+
+
+#: rule-name -> rule instance; populated by ``tools.lint.rules``
+RULES: Dict[str, Rule] = {}
+
+
+def register(cls):
+    """Class decorator: instantiate and register a :class:`Rule`."""
+    rule = cls()
+    if not rule.name:
+        raise LintConfigError(f"rule {cls.__name__} has no name")
+    if rule.name in RULES:
+        raise LintConfigError(f"duplicate rule name {rule.name!r}")
+    RULES[rule.name] = rule
+    return cls
+
+
+# ----------------------------------------------------------------------
+# Shared AST helpers
+# ----------------------------------------------------------------------
+
+class ImportMap:
+    """Alias-aware dotted-name resolution for one module.
+
+    Tracks ``import``/``from`` bindings so rules can resolve
+    ``np.random.default_rng`` / ``from time import monotonic`` /
+    ``import jax.numpy as jnp`` uniformly to canonical dotted paths —
+    matching on surface spelling would miss every aliased import.
+    """
+
+    def __init__(self, tree: ast.Module):
+        self.aliases: Dict[str, str] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.asname:
+                        self.aliases[a.asname] = a.name
+                    else:
+                        # ``import numpy.random`` binds ``numpy``
+                        head = a.name.split(".")[0]
+                        self.aliases[head] = head
+            elif isinstance(node, ast.ImportFrom):
+                if node.level or not node.module:
+                    continue               # relative imports: repo code
+                for a in node.names:
+                    if a.name == "*":
+                        continue
+                    bound = a.asname or a.name
+                    self.aliases[bound] = f"{node.module}.{a.name}"
+
+    def resolve(self, node: ast.AST) -> Optional[str]:
+        """Dotted path for a Name/Attribute chain, or None."""
+        parts: List[str] = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if isinstance(node, ast.Name) and node.id in self.aliases:
+            return ".".join([self.aliases[node.id]] + parts[::-1])
+        return None
+
+
+def names_in(node: ast.AST) -> Iterable[str]:
+    """All Name identifiers read anywhere under ``node``."""
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name):
+            yield n.id
+
+
+def in_zone(rel: str, zones: Sequence[str]) -> bool:
+    """True when a root-relative path falls under any zone prefix
+    (zones ending in '/' are directories, otherwise exact files)."""
+    return any(rel.startswith(z) if z.endswith("/") else rel == z
+               for z in zones)
+
+
+# ----------------------------------------------------------------------
+# Pragmas, fingerprints, baseline
+# ----------------------------------------------------------------------
+
+def pragma_disabled(line_text: str) -> frozenset:
+    """Rule names disabled by a ``# repro-lint: disable=...`` pragma on
+    this line (``all`` disables every rule)."""
+    m = PRAGMA_RE.search(line_text)
+    if not m:
+        return frozenset()
+    return frozenset(p.strip() for p in m.group(1).split(",")
+                     if p.strip())
+
+
+def fingerprint(finding: Finding, line_text: str) -> str:
+    """Line-number-independent identity for baseline accounting: the
+    rule, the file, and the *stripped text* of the offending line (the
+    message for file-level findings), so unrelated edits above a
+    grandfathered finding never churn the baseline."""
+    anchor = line_text.strip() if finding.line else finding.message
+    raw = f"{finding.rule}\x00{finding.path}\x00{anchor}"
+    return hashlib.sha256(raw.encode()).hexdigest()[:16]
+
+
+def load_baseline(path: Path) -> Dict[str, Dict]:
+    """fingerprint -> entry dict (with remaining ``count``)."""
+    if not path.exists():
+        return {}
+    data = json.loads(path.read_text(encoding="utf-8"))
+    if data.get("version") != BASELINE_VERSION:
+        raise LintConfigError(
+            f"{path}: baseline version {data.get('version')!r} != "
+            f"{BASELINE_VERSION}; regenerate with --write-baseline")
+    return {e["fp"]: dict(e) for e in data.get("entries", [])}
+
+
+def baseline_entries(findings: Sequence[Finding],
+                     ctx: Context) -> List[Dict]:
+    """Baseline rows for the given findings, fingerprint-deduplicated
+    with multiplicity (two identical lines in one file grandfather two
+    findings, not unbounded many)."""
+    rows: Dict[str, Dict] = {}
+    for f in findings:
+        text = ""
+        if f.line:
+            try:
+                text = ctx.source(ctx.root / f.path).line_text(f.line)
+            except OSError:
+                text = ""
+        fp = fingerprint(f, text)
+        if fp in rows:
+            rows[fp]["count"] += 1
+        else:
+            rows[fp] = {"fp": fp, "rule": f.rule, "path": f.path,
+                        "count": 1,
+                        "anchor": (text.strip() if f.line
+                                   else f.message)[:120]}
+    return sorted(rows.values(), key=lambda e: (e["path"], e["rule"],
+                                                e["fp"]))
+
+
+def write_baseline(path: Path, findings: Sequence[Finding],
+                   ctx: Context) -> int:
+    entries = baseline_entries(findings, ctx)
+    payload = {"version": BASELINE_VERSION, "entries": entries}
+    path.write_text(json.dumps(payload, indent=1, sort_keys=True)
+                    + "\n", encoding="utf-8")
+    return len(entries)
+
+
+# ----------------------------------------------------------------------
+# File collection and the runner
+# ----------------------------------------------------------------------
+
+def collect_files(root: Path, path_args: Sequence[str]) -> List[Path]:
+    """Resolve CLI path arguments to the lintable file list.
+
+    Directories are walked recursively (skipping
+    :data:`EXCLUDE_PARTS` components *below* the argument, so
+    explicitly pointing at a fixture directory still lints it);
+    explicit files are always included.
+    """
+    out: List[Path] = []
+    seen = set()
+    for arg in path_args:
+        p = Path(arg)
+        if not p.is_absolute():
+            p = root / p
+        if p.is_file():
+            candidates = [p]
+        elif p.is_dir():
+            candidates = [
+                f for f in sorted(p.rglob("*"))
+                if f.is_file() and f.suffix in LINT_SUFFIXES
+                and not any(part in EXCLUDE_PARTS
+                            for part in f.relative_to(p).parts)]
+        else:
+            raise LintConfigError(f"no such path: {arg}")
+        for f in candidates:
+            r = f.resolve()
+            if r not in seen:
+                seen.add(r)
+                out.append(r)
+    return out
+
+
+@dataclasses.dataclass
+class Report:
+    findings: List[Finding]            # actionable (gate on these)
+    suppressed: List[Finding]          # pragma-silenced
+    baselined: List[Finding]           # grandfathered
+    stale_baseline: List[Dict]         # entries that no longer match
+    checked_files: int
+    rules_run: List[str]
+
+    @property
+    def exit_code(self) -> int:
+        return 1 if self.findings else 0
+
+    def to_json(self) -> Dict:
+        return {
+            "findings": [dataclasses.asdict(f) for f in self.findings],
+            "suppressed": len(self.suppressed),
+            "baselined": len(self.baselined),
+            "stale_baseline": self.stale_baseline,
+            "checked_files": self.checked_files,
+            "rules": self.rules_run,
+            "exit_code": self.exit_code,
+        }
+
+
+def run_lint(root: Path, paths: Sequence[str],
+             rule_names: Optional[Sequence[str]] = None,
+             baseline_path: Optional[Path] = None,
+             use_baseline: bool = True) -> Tuple[Report, Context]:
+    """Run the registered rules over ``paths`` and classify findings.
+
+    Returns the report plus the context (the CLI reuses the context
+    for ``--write-baseline``).
+    """
+    import tools.lint.rules  # noqa: F401  (registers RULES lazily)
+
+    root = Path(root).resolve()
+    files = collect_files(root, paths or list(DEFAULT_PATHS))
+    ctx = Context(root, files)
+
+    if rule_names:
+        unknown = sorted(set(rule_names) - set(RULES))
+        if unknown:
+            raise LintConfigError(
+                f"unknown rule(s) {unknown}; registered: "
+                f"{sorted(RULES)}")
+        active = {n: RULES[n] for n in rule_names}
+    else:
+        active = dict(RULES)
+
+    raw: List[Finding] = []
+    parsed: Dict[Path, Source] = {}
+    for f in files:
+        src = ctx.source(f)
+        parsed[f] = src
+        if f.suffix == ".py":
+            try:
+                src.tree
+            except SyntaxError as e:
+                src.parse_error = e
+                raw.append(Finding(
+                    rule="parse-error", path=src.rel,
+                    line=e.lineno or 0,
+                    message=f"file does not parse: {e.msg}"))
+
+    for name in sorted(active):
+        rule = active[name]
+        for src in ctx.selected(rule.suffixes):
+            if src.parse_error is not None:
+                continue
+            raw.extend(rule.check_source(src, ctx))
+        raw.extend(rule.check_repo(ctx))
+
+    raw.sort(key=lambda f: (f.path, f.line, f.rule, f.message))
+
+    # pragma suppression (same-line, line-anchored findings only)
+    kept: List[Finding] = []
+    suppressed: List[Finding] = []
+    for f in raw:
+        text = ""
+        if f.line:
+            try:
+                text = ctx.source(root / f.path).line_text(f.line)
+            except OSError:
+                text = ""
+        disabled = pragma_disabled(text)
+        if f.line and ("all" in disabled or f.rule in disabled):
+            suppressed.append(f)
+        else:
+            kept.append(f)
+
+    # baseline subtraction
+    baselined: List[Finding] = []
+    stale: List[Dict] = []
+    if use_baseline:
+        bpath = baseline_path or (root / DEFAULT_BASELINE)
+        budget = load_baseline(bpath)
+        remaining: List[Finding] = []
+        for f in kept:
+            text = (ctx.source(root / f.path).line_text(f.line)
+                    if f.line else "")
+            fp = fingerprint(f, text)
+            entry = budget.get(fp)
+            if entry and entry["count"] > 0:
+                entry["count"] -= 1
+                baselined.append(f)
+            else:
+                remaining.append(f)
+        kept = remaining
+        stale = [e for e in budget.values() if e["count"] > 0]
+
+    return Report(findings=kept, suppressed=suppressed,
+                  baselined=baselined, stale_baseline=stale,
+                  checked_files=len(files),
+                  rules_run=sorted(active)), ctx

@@ -1,0 +1,5 @@
+"""Rule modules register themselves into ``tools.lint.core.RULES`` at
+import time; importing this package activates the full registry."""
+from tools.lint.rules import (docs, env_validation, except_breadth,  # noqa: F401
+                              host_rng, jit_purity, salt_drift,
+                              wall_clock, xp_generic)

@@ -1,0 +1,75 @@
+"""doc-link + module-docstring: the docs checks, migrated from the
+standalone ``tools/check_docs.py`` into the lint framework (PR 2
+introduced them as a separate CI job; this PR gives CI a single
+analysis entry point).
+
+  * **doc-link** — every relative link target in a linted ``*.md``
+    file resolves to an existing file/directory (anchors stripped,
+    http(s)/mailto ignored).  A broken intra-repo link means a doc
+    promises something the tree no longer has.
+  * **module-docstring** — every public module in the documented
+    package dirs carries a real module docstring (>= 40 chars): the
+    architecture docs promise each core/experiments module names the
+    paper section it implements, and the later layers (serving,
+    scenarios, runtime, launch) adopted the same contract.
+"""
+from __future__ import annotations
+
+import ast
+import re
+
+from tools.lint.core import (Context, Finding, Rule, Source, in_zone,
+                             register)
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+
+DOCSTRING_ZONES = (
+    "src/repro/core/",
+    "src/repro/experiments/",
+    "src/repro/serving/",
+    "src/repro/scenarios/",
+    "src/repro/runtime/",
+    "src/repro/launch/",
+)
+MIN_DOCSTRING_CHARS = 40
+
+
+@register
+class DocLinkRule(Rule):
+    name = "doc-link"
+    contract = "relative markdown links resolve inside the repo"
+    suffixes = (".md",)
+
+    def check_source(self, src: Source, ctx: Context):
+        for i, line in enumerate(src.lines, start=1):
+            for target in LINK_RE.findall(line):
+                if target.startswith(("http://", "https://",
+                                      "mailto:", "#")):
+                    continue
+                path = target.split("#", 1)[0]
+                if not path:
+                    continue
+                if not (src.path.parent / path).resolve().exists():
+                    yield Finding(self.name, src.rel, i,
+                                  f"broken link -> {target}")
+
+
+@register
+class ModuleDocstringRule(Rule):
+    name = "module-docstring"
+    contract = ("public modules in documented package dirs carry a "
+                f">= {MIN_DOCSTRING_CHARS}-char module docstring")
+
+    def check_source(self, src: Source, ctx: Context):
+        if not in_zone(src.rel, DOCSTRING_ZONES):
+            return
+        name = src.path.name
+        if name.startswith("_") and name != "__init__.py":
+            return                         # private helpers exempt
+        doc = ast.get_docstring(src.tree)
+        if not doc or len(doc) < MIN_DOCSTRING_CHARS:
+            yield Finding(
+                self.name, src.rel, 1,
+                "missing or too-short module docstring "
+                f"(< {MIN_DOCSTRING_CHARS} chars): say what paper "
+                "section / layer contract this module implements")

@@ -1,0 +1,183 @@
+"""env-validation: environment reads route through validated ``_env_*``
+helpers, and string-enum literals must be members of their registry.
+
+Contract (PR 5/6/8 loud-validation sweeps): a misconfigured
+performance knob must fail at startup naming the variable — a campaign
+quietly running unsharded (junk ``REPRO_DEVICES`` swallowed) or
+single-worker (junk ``REPRO_WORKERS``) is the worst failure mode.
+Two checks:
+
+  * every ``os.environ.get``/``os.environ[...]``/``os.getenv`` *read*
+    must sit inside an ``_env``-prefixed helper (the
+    ``device_config._env_int`` idiom: validate, raise ``ValueError``
+    naming the variable) — except free-form pass-through variables
+    (``XLA_FLAGS``/``JAX_PLATFORM_NAME``) that downstream consumers
+    validate themselves.  Writes are configuration, not reads, and
+    stay legal.
+  * string literals passed as registry-typed keyword arguments
+    (``engine=``, ``select_backend=``, ``demand_profile=``,
+    ``scenario=``) must be members of the registry that validates
+    them at runtime — the registries are re-parsed from their
+    defining modules at lint time, so the lint can never drift from
+    the code (``ENGINES`` in experiments/spec.py, ``BACKENDS`` in
+    core/simulator_vec.py, ``DEMAND_PROFILES`` in core/simulator.py,
+    ``SCENARIOS`` keys + the ``faults@<float>`` family in
+    scenarios/scenario.py).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Optional, Tuple
+
+from tools.lint.core import (Context, Finding, ImportMap, Rule,
+                             Source, register)
+
+#: env vars whose values are free-form strings validated downstream
+FREEFORM_ENV = {"XLA_FLAGS", "JAX_PLATFORM_NAME", "PYTHONPATH", "CI"}
+
+#: registry-typed keyword arguments -> (defining module, extractor)
+REGISTRY_SOURCES = {
+    "engine": ("src/repro/experiments/spec.py", "ENGINES"),
+    "select_backend": ("src/repro/core/simulator_vec.py", "BACKENDS"),
+    "demand_profile": ("src/repro/core/simulator.py",
+                       "DEMAND_PROFILES"),
+    "scenario": ("src/repro/scenarios/scenario.py", "SCENARIOS"),
+}
+
+
+def _enclosing_functions(tree: ast.Module) -> Dict[int, str]:
+    """lineno -> name of the innermost function containing it."""
+    spans = []
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            spans.append((node.lineno, node.end_lineno or node.lineno,
+                          node.name))
+    out: Dict[int, str] = {}
+    for lo, hi, name in sorted(spans, key=lambda s: s[1] - s[0],
+                               reverse=True):
+        for ln in range(lo, hi + 1):
+            out[ln] = name            # innermost (smallest span) wins
+    return out
+
+
+def _load_registry(ctx: Context, rel: str,
+                   symbol: str) -> Optional[Tuple[str, ...]]:
+    """Parse ``symbol``'s literal members out of a defining module.
+
+    Returns None when the module (or symbol) is absent — e.g. lint
+    runs rooted at a fixture tree — in which case the enum check is
+    skipped rather than guessed at.
+    """
+    path = ctx.root / rel
+    if not path.exists():
+        return None
+    try:
+        tree = ctx.source(path).tree
+    except SyntaxError:
+        return None
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Assign):
+            continue
+        if not any(isinstance(t, ast.Name) and t.id == symbol
+                   for t in node.targets):
+            continue
+        v = node.value
+        if isinstance(v, (ast.Tuple, ast.List, ast.Set)):
+            elts = v.elts
+        elif isinstance(v, ast.Dict):
+            elts = v.keys
+        else:
+            continue
+        members = tuple(e.value for e in elts
+                        if isinstance(e, ast.Constant)
+                        and isinstance(e.value, str))
+        if members:
+            return members
+    return None
+
+
+def _valid_scenario(value: str, members: Tuple[str, ...]) -> bool:
+    if value in members:
+        return True
+    if value.startswith("faults@"):
+        try:
+            float(value[len("faults@"):])
+            return True
+        except ValueError:
+            return False
+    return False
+
+
+@register
+class EnvValidationRule(Rule):
+    name = "env-validation"
+    contract = ("os.environ reads go through validated _env_* "
+                "helpers; registry-typed string literals must be "
+                "registry members")
+
+    def check_source(self, src: Source, ctx: Context):
+        imap = ImportMap(src.tree)
+        owners = _enclosing_functions(src.tree)
+
+        for node in ast.walk(src.tree):
+            # --- raw environment reads -------------------------------
+            read = self._env_read(node, imap)
+            if read is not None:
+                varname = read
+                fn = owners.get(node.lineno, "")
+                if fn.startswith("_env"):
+                    continue              # inside a validating helper
+                if varname in FREEFORM_ENV:
+                    continue
+                shown = varname or "<dynamic>"
+                yield Finding(
+                    self.name, src.rel, node.lineno,
+                    f"raw environment read of {shown} outside an "
+                    "_env_* helper: route through a validating "
+                    "helper (device_config._env_int idiom) so junk "
+                    "values raise a ValueError naming the variable")
+                continue
+
+            # --- registry-typed string-literal kwargs ----------------
+            if isinstance(node, ast.Call):
+                for kw in node.keywords:
+                    if kw.arg not in REGISTRY_SOURCES:
+                        continue
+                    if not (isinstance(kw.value, ast.Constant)
+                            and isinstance(kw.value.value, str)):
+                        continue
+                    rel_mod, symbol = REGISTRY_SOURCES[kw.arg]
+                    members = _load_registry(ctx, rel_mod, symbol)
+                    if members is None:
+                        continue
+                    value = kw.value.value
+                    ok = (_valid_scenario(value, members)
+                          if kw.arg == "scenario"
+                          else value in members)
+                    if not ok:
+                        yield Finding(
+                            self.name, src.rel, kw.value.lineno,
+                            f"{kw.arg}={value!r} is not a member of "
+                            f"{symbol} in {rel_mod} "
+                            f"(members: {sorted(members)}"
+                            + (", or 'faults@<float>'"
+                               if kw.arg == "scenario" else "")
+                            + ") — this call would raise at runtime")
+
+    @staticmethod
+    def _env_read(node: ast.AST, imap: ImportMap) -> Optional[str]:
+        """Env-var name for a read node ('' when dynamic), else None."""
+        if isinstance(node, ast.Call):
+            dotted = imap.resolve(node.func)
+            if dotted in ("os.environ.get", "os.getenv"):
+                if node.args and isinstance(node.args[0], ast.Constant):
+                    return str(node.args[0].value)
+                return ""
+        if isinstance(node, ast.Subscript) and \
+                isinstance(node.ctx, ast.Load):
+            if imap.resolve(node.value) == "os.environ":
+                sl = node.slice
+                if isinstance(sl, ast.Constant):
+                    return str(sl.value)
+                return ""
+        return None

@@ -1,0 +1,62 @@
+"""except-breadth: no new bare/broad exception handlers that swallow.
+
+Contract (PR 5's loud-error sweep, mechanized by this PR's satellite):
+``except Exception`` / bare ``except`` hides real failures — the
+retry-ladder exhaustion bug returned saturated-table *metrics* instead
+of an error for two PRs because a broad handler ate the signal.  A
+broad handler is legal only when it
+
+  * re-raises (a bare ``raise`` anywhere in the handler body — the
+    cleanup-then-propagate idiom swallows nothing), or
+  * carries a justifying ``# repro-lint: disable=except-breadth``
+    pragma naming why the boundary must be broad (CLI harness
+    boundaries that print-and-continue).
+
+Everything else must name the exception types it expects.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.lint.core import Context, Finding, Rule, Source, register
+
+BROAD = {"Exception", "BaseException"}
+
+
+def _is_broad(type_node) -> bool:
+    if type_node is None:
+        return True                               # bare except
+    if isinstance(type_node, ast.Name):
+        return type_node.id in BROAD
+    if isinstance(type_node, ast.Tuple):
+        return any(_is_broad(e) for e in type_node.elts)
+    return False
+
+
+def _reraises(handler: ast.ExceptHandler) -> bool:
+    return any(isinstance(n, ast.Raise) and n.exc is None
+               for n in ast.walk(handler))
+
+
+@register
+class ExceptBreadthRule(Rule):
+    name = "except-breadth"
+    contract = ("broad except handlers must re-raise or carry a "
+                "justifying pragma; otherwise name the exceptions")
+
+    def check_source(self, src: Source, ctx: Context):
+        for node in ast.walk(src.tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            if not _is_broad(node.type):
+                continue
+            if _reraises(node):
+                continue
+            what = ("bare except" if node.type is None else
+                    f"except {ast.unparse(node.type)}")
+            yield Finding(
+                self.name, src.rel, node.lineno,
+                f"{what} swallows errors silently: narrow to the "
+                "specific exception types this site expects (and log "
+                "the swallowed error loudly), or justify with "
+                "# repro-lint: disable=except-breadth")

@@ -1,0 +1,102 @@
+"""no-host-rng: stateful host RNG is banned from CRN zones, and
+global-state RNG is banned everywhere.
+
+Contract (PR 4/7/8): every draw in the compiled engines, the scenario
+layer, and the serving traffic/front-end stack must be a counter-based
+splitmix64 hash of an explicit key — ``np.random`` Generator streams
+have data-dependent call counts that break batch/retry/device-count
+composition (the PR 4 jit blocker), and any host RNG in a CRN zone
+silently destroys the common-random-numbers property that makes
+policy deltas pure policy effects.
+
+  * CRN zones (``scenarios/``, ``serving/``, ``simulator_jit.py``):
+    ANY reference to ``np.random``, stdlib ``random``, or
+    ``jax.random`` is a finding — keyed splitmix64
+    (``repro.scenarios.crn``) is the only sanctioned randomness.
+  * Everywhere else: explicitly seeded per-point streams
+    (``default_rng``/``Generator``/``SeedSequence``/bit generators)
+    are the repo's documented contract and stay legal, as does keyed
+    ``jax.random``; module-global draws (``np.random.seed``,
+    ``np.random.random``, ...) and the stdlib ``random`` module are
+    findings — they are process-order-dependent by construction.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.lint.core import (Context, Finding, ImportMap, Rule,
+                             Source, in_zone, register)
+
+#: zero-host-RNG zones: only keyed splitmix64 draws are legal here
+CRN_ZONES = (
+    "src/repro/scenarios/",
+    "src/repro/serving/",
+    "src/repro/core/simulator_jit.py",
+)
+
+#: explicitly-seeded stream constructors allowed outside CRN zones
+SEEDED_STREAM_API = {
+    "default_rng", "Generator", "SeedSequence", "BitGenerator",
+    "PCG64", "PCG64DXSM", "Philox", "SFC64", "MT19937",
+}
+
+
+@register
+class HostRngRule(Rule):
+    name = "no-host-rng"
+    contract = ("CRN zones draw only keyed splitmix64; elsewhere host "
+                "RNG must be an explicitly seeded per-point stream")
+
+    def check_source(self, src: Source, ctx: Context):
+        imap = ImportMap(src.tree)
+        crn = in_zone(src.rel, CRN_ZONES)
+        reported = set()
+        for node in ast.walk(src.tree):
+            if not isinstance(node, (ast.Attribute, ast.Name)):
+                continue
+            dotted = imap.resolve(node)
+            if dotted is None:
+                continue
+            kind = _classify(dotted)
+            if kind is None:
+                continue
+            # report each chain once, at its outermost resolution:
+            # np.random.default_rng resolves at three nesting levels
+            key = (node.lineno, node.col_offset)
+            if key in reported:
+                continue
+            reported.add(key)
+            # mark inner positions of this chain as handled
+            inner = node
+            while isinstance(inner, ast.Attribute):
+                inner = inner.value
+                reported.add((getattr(inner, "lineno", -1),
+                              getattr(inner, "col_offset", -1)))
+            if crn:
+                yield Finding(
+                    self.name, src.rel, node.lineno,
+                    f"{dotted} in CRN zone {src.rel!r}: this layer "
+                    "must draw via keyed splitmix64 "
+                    "(repro.scenarios.crn / the engine's counter "
+                    "draws) only")
+            elif kind == "global":
+                yield Finding(
+                    self.name, src.rel, node.lineno,
+                    f"{dotted} uses process-global RNG state "
+                    "(draw-order dependent); use an explicitly "
+                    "seeded np.random.default_rng(seed) stream or a "
+                    "keyed splitmix64 draw")
+
+def _classify(dotted: str):
+    """'global' (banned everywhere), 'seeded' (banned only in CRN
+    zones), or None (not RNG)."""
+    if dotted == "random" or dotted.startswith("random."):
+        return "global"
+    if dotted.startswith("jax.random"):
+        return "seeded"
+    if dotted == "numpy.random":
+        return "seeded"                    # bare namespace reference
+    if dotted.startswith("numpy.random."):
+        head = dotted.split("numpy.random.", 1)[1].split(".")[0]
+        return "seeded" if head in SEEDED_STREAM_API else "global"
+    return None

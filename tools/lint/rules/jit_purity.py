@@ -1,0 +1,214 @@
+"""jit-purity: ``lax.while_loop``/``fori_loop`` body (and cond)
+functions stay pure traced code.
+
+Contract (PR 4): the entire lockstep step compiles as one pure
+``(carry) -> (carry)`` function; host constructs inside it either fail
+at trace time (Python branching on a tracer) or — worse — trace
+"successfully" into silent wrongness (a host ``np`` op constant-folds
+one batch's values into the compiled graph).  This rule flags, inside
+detected loop-body scopes:
+
+  * Python ``if``/``while``/``assert`` whose test references a traced
+    name (a loop-body parameter, or any local assigned from one —
+    branching on *closure* statics like ``_build_run``'s
+    ``use_banks``/``preempt`` is legal staging and not flagged);
+  * ``float()``/``int()``/``bool()`` coercions of traced names and
+    ``.item()``/``.tolist()`` calls — host round-trips;
+  * ``np.*`` calls taking traced arguments (dtype constants like
+    ``np.uint64(33)`` with literal args are legal weak-typed
+    scalars);
+  * host-callback escapes (``jax.debug.callback``,
+    ``jax.pure_callback``, ``io_callback``, ``host_callback``) —
+    flagged unconditionally; pragma one if it is truly intended.
+
+Bodies are resolved statically: a ``Name``, a ``functools.partial``
+over a name (pre-bound arguments count as traced too — they are loop
+operands), or an inline ``lambda``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Set
+
+from tools.lint.core import (Context, Finding, ImportMap, Rule,
+                             Source, register)
+
+LOOP_CALLS = {"jax.lax.while_loop", "lax.while_loop",
+              "jax.lax.fori_loop", "lax.fori_loop"}
+
+CALLBACKS = {"jax.debug.callback", "jax.pure_callback",
+             "jax.experimental.io_callback", "io_callback",
+             "jax.experimental.host_callback"}
+
+COERCIONS = {"float", "int", "bool", "complex"}
+
+HOST_METHODS = {"item", "tolist"}
+
+
+def _function_defs(tree: ast.Module) -> Dict[str, List[ast.AST]]:
+    out: Dict[str, List[ast.AST]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            out.setdefault(node.name, []).append(node)
+    return out
+
+
+def _body_functions(call: ast.Call, dotted: str, imap: ImportMap,
+                    defs: Dict[str, List[ast.AST]]):
+    """The traced-function arguments of one loop call: (cond, body)
+    for while_loop, body for fori_loop."""
+    idx = (0, 1) if dotted.endswith("while_loop") else (2,)
+    for i in idx:
+        if i >= len(call.args):
+            continue
+        arg = call.args[i]
+        if isinstance(arg, ast.Lambda):
+            yield arg
+        elif isinstance(arg, ast.Name):
+            yield from defs.get(arg.id, [])
+        elif isinstance(arg, ast.Call) and \
+                imap.resolve(arg.func) in ("functools.partial",
+                                           "partial"):
+            target = arg.args[0] if arg.args else None
+            if isinstance(target, ast.Name):
+                yield from defs.get(target.id, [])
+
+
+def _params(fn) -> List[str]:
+    a = fn.args
+    names = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return names
+
+
+def _tainted_names(fn) -> Set[str]:
+    """Params plus every local transitively assigned from one."""
+    tainted = set(_params(fn))
+    changed = True
+    while changed:
+        changed = False
+        for node in ast.walk(fn):
+            targets: List[ast.AST] = []
+            value = None
+            if isinstance(node, ast.Assign):
+                targets, value = node.targets, node.value
+            elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+                targets = [node.target]
+                value = node.value
+            elif isinstance(node, ast.For):
+                targets, value = [node.target], node.iter
+            elif isinstance(node, ast.withitem) and node.optional_vars:
+                targets = [node.optional_vars]
+                value = node.context_expr
+            if value is None:
+                continue
+            if not any(n in tainted for n in _names(value)):
+                continue
+            for t in targets:
+                for n in ast.walk(t):
+                    if isinstance(n, ast.Name) and n.id not in tainted:
+                        tainted.add(n.id)
+                        changed = True
+    return tainted
+
+
+def _names(node: ast.AST) -> Iterable[str]:
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name):
+            yield n.id
+
+
+@register
+class JitPurityRule(Rule):
+    name = "jit-purity"
+    contract = ("lax loop bodies: no python branching on traced "
+                "values, host coercions, traced np calls, or host "
+                "callbacks")
+
+    def check_source(self, src: Source, ctx: Context):
+        imap = ImportMap(src.tree)
+        defs = _function_defs(src.tree)
+        seen: Set[int] = set()
+        for node in ast.walk(src.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            dotted = imap.resolve(node.func)
+            if dotted not in LOOP_CALLS:
+                continue
+            for fn in _body_functions(node, dotted, imap, defs):
+                if id(fn) in seen:
+                    continue
+                seen.add(id(fn))
+                yield from self._check_body(src, fn, imap)
+
+    def _check_body(self, src: Source, fn, imap: ImportMap):
+        tainted = _tainted_names(fn)
+        label = getattr(fn, "name", "<lambda>")
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.If, ast.While)):
+                hits = sorted(set(_names(node.test)) & tainted)
+                if hits:
+                    yield Finding(
+                        self.name, src.rel, node.lineno,
+                        f"python {type(node).__name__.lower()} on "
+                        f"traced value(s) {hits} inside loop body "
+                        f"{label!r}: use jnp.where / lax.cond — "
+                        "python control flow cannot branch on "
+                        "tracers")
+            elif isinstance(node, ast.Assert):
+                hits = sorted(set(_names(node.test)) & tainted)
+                if hits:
+                    yield Finding(
+                        self.name, src.rel, node.lineno,
+                        f"assert on traced value(s) {hits} inside "
+                        f"loop body {label!r}: use "
+                        "checkify/error codes — asserts read tracer "
+                        "truthiness on the host")
+            elif isinstance(node, ast.Call):
+                yield from self._check_call(src, node, imap, tainted,
+                                            label)
+
+    def _check_call(self, src: Source, node: ast.Call,
+                    imap: ImportMap, tainted, label):
+        fnref = node.func
+        arg_names = set()
+        for a in list(node.args) + [k.value for k in node.keywords]:
+            arg_names |= set(_names(a))
+        traced_args = sorted(arg_names & tainted)
+
+        if isinstance(fnref, ast.Name) and fnref.id in COERCIONS \
+                and traced_args:
+            yield Finding(
+                self.name, src.rel, node.lineno,
+                f"{fnref.id}() coerces traced value(s) "
+                f"{traced_args} to a host scalar inside loop body "
+                f"{label!r}: keep it as a traced array "
+                "(astype/jnp ops)")
+            return
+        if isinstance(fnref, ast.Attribute) and \
+                fnref.attr in HOST_METHODS:
+            yield Finding(
+                self.name, src.rel, node.lineno,
+                f".{fnref.attr}() inside loop body {label!r} "
+                "round-trips a tracer to the host")
+            return
+        dotted = imap.resolve(fnref)
+        if dotted is None:
+            return
+        if dotted in CALLBACKS or dotted.startswith(
+                "jax.experimental.host_callback."):
+            yield Finding(
+                self.name, src.rel, node.lineno,
+                f"host callback {dotted} inside loop body {label!r}: "
+                "the compiled lockstep must not escape to the host "
+                "per step (pragma this line if truly intended)")
+        elif dotted.startswith("numpy.") and traced_args:
+            yield Finding(
+                self.name, src.rel, node.lineno,
+                f"{dotted}(...) applied to traced value(s) "
+                f"{traced_args} inside loop body {label!r}: host "
+                "numpy ops constant-fold or break tracing — use the "
+                "jnp equivalent")

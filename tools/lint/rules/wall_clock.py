@@ -1,0 +1,63 @@
+"""no-wall-clock: pure simulation/serving paths never *call* the wall
+clock — clocks are injected.
+
+Contract (PR 7): every timestamp in ``core/``, ``serving/``,
+``scenarios/`` and ``experiments/`` flows through an injected zero-arg
+clock callable (``core.serving.MESCServer(clock=...)``,
+``serving.clock.VirtualClock``); ``time.monotonic`` may appear as a
+*default value* or be stored/passed as an object, but calling
+``time.time()``/``time.monotonic()``/``datetime.now()`` inline makes
+the result time-dependent and kills byte-reproducibility (the fig12
+byte-identical-replay CI gate exists because of exactly this class of
+bug).
+
+Only ``ast.Call`` nodes are flagged: references used as injectable
+defaults stay legal, which is precisely the injection contract.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.lint.core import (Context, Finding, ImportMap, Rule,
+                             Source, in_zone, register)
+
+#: injected-clock zones (launch/, checkpointing/ and benchmarks are
+#: host-side tools that legitimately measure wall time)
+PURE_ZONES = (
+    "src/repro/core/",
+    "src/repro/serving/",
+    "src/repro/scenarios/",
+    "src/repro/experiments/",
+)
+
+BANNED_CALLS = {
+    "time.time", "time.time_ns",
+    "time.monotonic", "time.monotonic_ns",
+    "time.perf_counter", "time.perf_counter_ns",
+    "time.process_time", "time.process_time_ns",
+    "datetime.datetime.now", "datetime.datetime.utcnow",
+    "datetime.datetime.today", "datetime.date.today",
+}
+
+
+@register
+class WallClockRule(Rule):
+    name = "no-wall-clock"
+    contract = ("pure sim/serving paths call injected clocks only; "
+                "wall-clock reads are host-tool territory")
+
+    def check_source(self, src: Source, ctx: Context):
+        if not in_zone(src.rel, PURE_ZONES):
+            return
+        imap = ImportMap(src.tree)
+        for node in ast.walk(src.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            dotted = imap.resolve(node.func)
+            if dotted in BANNED_CALLS:
+                yield Finding(
+                    self.name, src.rel, node.lineno,
+                    f"{dotted}() called in pure path {src.rel!r}: "
+                    "inject a clock callable (PR 7 contract — "
+                    "referencing the function as a default is fine, "
+                    "calling it inline is not)")

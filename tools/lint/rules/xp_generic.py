@@ -1,0 +1,93 @@
+"""xp-generic: engine-shared code touches only the injected ``xp``
+array namespace.
+
+Contract (PR 8): ``scenarios.scenario.demand_multiplier`` and friends
+compile into the NumPy engines *and* the jit engine from one source —
+the caller injects ``xp`` (``numpy`` or ``jax.numpy``) and the
+function must be bit-identical under both.  Reaching for ``jnp``/
+``jax`` directly forks the semantics per engine (and drags JAX into
+jax-free campaign workers); reaching for ``np`` array *ops* silently
+pins the jit path to host numpy (a tracer leak).  Only dtype
+constructors/constants and ``np.errstate`` are backend-neutral and
+stay legal.
+
+Applies to every function with a parameter named ``xp``, plus the
+modules listed in :data:`XP_FILES` that declare themselves xp-generic
+at module scope (``scenarios/crn.py``).
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.lint.core import (Context, Finding, ImportMap, Rule,
+                             Source, register)
+
+#: whole files whose module docstring promises xp-genericity
+XP_FILES = ("src/repro/scenarios/crn.py",)
+
+#: backend-neutral numpy attributes (dtype constructors, constants,
+#: and the overflow-warning guard) — everything else must go via xp
+NP_NEUTRAL = {
+    "uint8", "uint16", "uint32", "uint64",
+    "int8", "int16", "int32", "int64",
+    "float16", "float32", "float64", "bool_",
+    "errstate", "newaxis", "pi", "inf", "nan", "e",
+    "ndarray", "dtype", "integer", "floating", "generic",
+}
+
+
+@register
+class XpGenericRule(Rule):
+    name = "xp-generic"
+    contract = ("xp-parameterized (and XP_FILES) code uses the "
+                "injected xp namespace; np only for dtypes/errstate")
+
+    def check_source(self, src: Source, ctx: Context):
+        imap = ImportMap(src.tree)
+        if src.rel in XP_FILES:
+            yield from self._scan(src, src.tree, imap, "module")
+            return
+        for node in ast.walk(src.tree):
+            if not isinstance(node, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)):
+                continue
+            args = node.args
+            all_args = (args.posonlyargs + args.args + args.kwonlyargs)
+            if not any(a.arg == "xp" for a in all_args):
+                continue
+            yield from self._scan(src, node, imap,
+                                  f"function {node.name!r}")
+
+    def _scan(self, src: Source, scope: ast.AST, imap: ImportMap,
+              where: str):
+        reported = set()
+        for node in ast.walk(scope):
+            if not isinstance(node, (ast.Attribute, ast.Name)):
+                continue
+            dotted = imap.resolve(node)
+            if dotted is None:
+                continue
+            key = (node.lineno, node.col_offset)
+            if key in reported:
+                continue
+            bad = None
+            if dotted == "jax" or dotted.startswith("jax."):
+                bad = (f"{dotted} in xp-generic {where}: use the "
+                       "injected xp namespace — direct jax use forks "
+                       "the engines and drags JAX into jax-free "
+                       "workers")
+            elif dotted.startswith("numpy."):
+                head = dotted.split(".", 1)[1].split(".")[0]
+                if head not in NP_NEUTRAL:
+                    bad = (f"{dotted} in xp-generic {where}: only "
+                           "dtype constructors/constants and "
+                           "np.errstate are backend-neutral; array "
+                           "ops must go through xp")
+            if bad:
+                reported.add(key)
+                inner = node
+                while isinstance(inner, ast.Attribute):
+                    inner = inner.value
+                    reported.add((getattr(inner, "lineno", -1),
+                                  getattr(inner, "col_offset", -1)))
+                yield Finding(self.name, src.rel, node.lineno, bad)

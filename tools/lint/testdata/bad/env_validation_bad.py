@@ -1,0 +1,14 @@
+"""Violating fixture: raw env reads and a non-member registry
+literal (env-validation)."""
+import os
+
+
+def configure():
+    workers = os.environ.get("REPRO_WORKERS", "4")     # raw read
+    cache = os.environ["REPRO_CACHE_DIR"]              # raw subscript
+    plat = os.getenv("REPRO_PLATFORM")                 # raw getenv
+    return workers, cache, plat
+
+
+def sweep(run):
+    return run(engine="evnet")       # typo: not a member of ENGINES

@@ -1,0 +1,22 @@
+"""Violating fixture: broad handlers that swallow (except-breadth)."""
+
+
+def swallow_exception():
+    try:
+        return 1 / 0
+    except Exception:
+        return None
+
+
+def swallow_bare():
+    try:
+        return open("nope")
+    except:  # noqa: E722
+        return None
+
+
+def swallow_tuple():
+    try:
+        return int("x")
+    except (ValueError, Exception):
+        return None

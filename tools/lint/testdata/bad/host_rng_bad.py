@@ -1,0 +1,13 @@
+"""Violating fixture: process-global RNG outside CRN zones."""
+import random
+
+import numpy as np
+
+
+def draw_stdlib():
+    return random.random()
+
+
+def draw_np_global():
+    np.random.seed(0)
+    return np.random.random()

@@ -1,0 +1,21 @@
+"""Violating fixture: host constructs inside a lax.while_loop body."""
+import functools
+
+import jax
+import numpy as np
+
+
+def _body(bonus, carry):
+    t, acc = carry
+    if t > 3:                       # python branch on traced value
+        acc = acc + bonus
+    host = float(acc)               # host coercion of traced value
+    probe = acc.item()              # host round-trip
+    extra = np.maximum(acc, t)      # host numpy on traced values
+    del host, probe
+    return (t + 1, acc + extra)
+
+
+def run():
+    return jax.lax.while_loop(lambda c: c[0] < 10,
+                              functools.partial(_body, 2), (0, 0))

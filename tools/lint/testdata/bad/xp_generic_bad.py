@@ -1,0 +1,9 @@
+"""Violating fixture: direct np/jax array ops in xp-generic code."""
+import jax.numpy as jnp
+import numpy as np
+
+
+def mix(xp, a):
+    b = np.asarray(a)           # array op must go through xp
+    c = jnp.cumsum(b)           # direct jax forks the engines
+    return xp.sum(c)

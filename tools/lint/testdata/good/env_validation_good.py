@@ -1,0 +1,23 @@
+"""Clean fixture: env reads inside a validating _env_* helper,
+registry literals that are members, and writes (configuration)."""
+import os
+
+
+def _env_int(name, default):
+    raw = os.environ.get(name)
+    if raw is None:
+        return default
+    try:
+        return int(raw)
+    except ValueError:
+        raise ValueError(f"{name}={raw!r} is not an integer") from None
+
+
+def configure():
+    os.environ["JAX_PLATFORM_NAME"] = "cpu"    # writes stay legal
+    flags = os.environ.get("XLA_FLAGS", "")    # free-form passthrough
+    return _env_int("REPRO_WORKERS", 4), flags
+
+
+def sweep(run):
+    return run(engine="jit", scenario="faults@0.05")

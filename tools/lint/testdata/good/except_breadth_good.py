@@ -1,0 +1,16 @@
+"""Clean fixture: narrow handlers and the re-raise idiom."""
+
+
+def narrow():
+    try:
+        return int("x")
+    except (ValueError, TypeError):
+        return None
+
+
+def cleanup_then_propagate(path):
+    try:
+        return open(path).read()
+    except BaseException:
+        print("cleanup")
+        raise

@@ -1,0 +1,13 @@
+"""Clean fixture: explicitly seeded per-point streams (legal outside
+CRN zones) and keyed jax.random."""
+import numpy as np
+
+
+def draw_seeded(seed):
+    rng = np.random.default_rng(seed)
+    return rng.random()
+
+
+def draw_keyed(key):
+    import jax.random as jr
+    return jr.uniform(key)

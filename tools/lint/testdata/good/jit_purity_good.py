@@ -1,0 +1,17 @@
+"""Clean fixture: pure traced while_loop body (jnp ops, lax.cond
+staging on closure statics only)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def build(use_bonus):
+    def body(carry):
+        t, acc = carry
+        if use_bonus:               # closure static: legal staging
+            acc = acc + 1
+        acc = jnp.where(t > 3, acc + 2, acc)
+        width = np.uint64(33)       # literal-arg dtype scalar: legal
+        return (t + 1, acc + jnp.uint64(width))
+
+    return jax.lax.while_loop(lambda c: c[0] < 10, body, (0, 0))

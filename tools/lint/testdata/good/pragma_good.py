@@ -1,0 +1,11 @@
+"""Clean-by-pragma fixture: real violations suppressed by same-line
+``# repro-lint: disable=...`` pragmas (the framework counts them as
+suppressed, not findings)."""
+import random
+
+
+def boundary():
+    try:
+        return random.random()  # repro-lint: disable=no-host-rng (fixture)
+    except Exception:  # repro-lint: disable=except-breadth (fixture)
+        return None

@@ -1,0 +1,8 @@
+"""Violating fixture tree: even a *seeded* host stream is banned in a
+CRN zone — only keyed splitmix64 draws are sanctioned here."""
+import numpy as np
+
+
+def jitter(seed, n):
+    rng = np.random.default_rng(seed)
+    return rng.random(n)

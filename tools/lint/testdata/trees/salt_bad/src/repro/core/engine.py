@@ -1,0 +1,8 @@
+"""Violating fixture tree: this module's semantics drifted from the
+pinned surface hash in the tree's salts.json (salt-drift)."""
+
+ENGINE_SEMANTICS_VERSION = 1
+
+
+def step(state):
+    return state + 2

@@ -1,0 +1,8 @@
+"""Violating fixture tree: inline wall-clock call in a pure zone —
+timestamps must flow through an injected clock callable."""
+import time
+
+
+def stamp(row):
+    row["t"] = time.monotonic()
+    return row

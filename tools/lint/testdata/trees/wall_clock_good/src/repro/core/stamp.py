@@ -1,0 +1,8 @@
+"""Clean fixture tree: the injection contract — referencing
+``time.monotonic`` as a default is legal; only inline calls are not."""
+import time
+
+
+def stamp(row, clock=time.monotonic):
+    row["t"] = clock()
+    return row
