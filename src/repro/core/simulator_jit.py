@@ -1312,6 +1312,32 @@ def _assemble(b: _VecBatch, s: Dict[str, np.ndarray],
 # Public entry point (called by simulator_vec.simulate_vbatch)
 # ----------------------------------------------------------------------
 
+def while_body_kernels(compiled_text: str) -> int:
+    """Number of XLA kernels (fusion instructions) in the while-loop
+    *body* of one optimized HLO module, excluding free instructions
+    (tuple plumbing, constants) — i.e. the number of thunks XLA:CPU
+    dispatches per lockstep step.
+
+    The body is identified as the largest non-fused computation in the
+    module (the step dominates cond/entry by far).  This walker is the
+    single implementation behind :func:`lockstep_kernel_count` and the
+    ``tools/graphlint`` budget manifests; keep them on one code path so
+    the committed kernel budgets and the perf log never disagree about
+    what "a kernel" is."""
+    best: List[str] = []
+    for m in re.finditer(r"(?m)^(\S[^{\n]*) \{$(.*?)^\}",
+                         compiled_text, re.S):
+        name, body = m.group(1).strip(), m.group(2)
+        if "fused_computation" in name:
+            continue
+        ops = re.findall(r"(?m)=\s+\S+\s+([\w-]+)\(", body)
+        if len(ops) > len(best):
+            best = ops
+    free = ("get-tuple-element", "constant", "tuple", "parameter",
+            "bitcast")
+    return sum(1 for op in best if op not in free)
+
+
 def lockstep_kernel_count(tasksets: Sequence[List[TaskParams]],
                           programs: Dict[str, Program], policy: Policy,
                           *, seeds: Sequence[int], duration: float = 2e7,
@@ -1319,17 +1345,16 @@ def lockstep_kernel_count(tasksets: Sequence[List[TaskParams]],
                           demand_profile: str = "sampled",
                           table_width: Optional[int] = None,
                           scenario=None) -> int:
-    """Number of XLA kernels (fusion instructions) in the compiled
-    lockstep computation for this batch shape/config.
+    """:func:`while_body_kernels` of the compiled lockstep computation
+    for this batch shape/config.
 
-    Counts every instruction of the optimized while-loop *body*
-    computation except free ones (tuple plumbing, constants) — i.e.
-    the number of thunks XLA:CPU dispatches per lockstep step.  The
-    grouped-carry refactor's whole point is cutting this number —
+    The grouped-carry refactor's whole point is cutting this number —
     XLA:CPU pays a per-kernel dispatch cost inside ``while_loop``
-    bodies — so ``benchmarks/perf_sim.py`` logs it next to the timing
-    samples in ``BENCH_sim.json`` (field ``xla_kernels``) where the
-    trajectory is tracked across PRs."""
+    bodies.  The *pinned* per-engine budgets live in
+    ``tools/graphlint/budgets.json`` (rule ``ir-budget-drift``), which
+    is also where ``benchmarks/perf_sim.py`` sources the
+    ``xla_kernels`` numbers it logs into ``BENCH_sim.json``; this
+    function remains the thin measurement primitive behind both."""
     require_jax()
     nominal = demand_profile == "nominal"
     scenario = get_scenario(scenario)
@@ -1352,19 +1377,7 @@ def lockstep_kernel_count(tasksets: Sequence[List[TaskParams]],
               "duration": jnp.float64(duration),
               "max_steps": jnp.int64(max_steps)}
         txt = run.lower(tb, sc, _carry0(b, seeds, K)).compile().as_text()
-    # the while body is the largest non-fused computation in the
-    # optimized module (the step dominates cond/entry by far)
-    best: List[str] = []
-    for m in re.finditer(r"(?m)^(\S[^{\n]*) \{$(.*?)^\}", txt, re.S):
-        name, body = m.group(1).strip(), m.group(2)
-        if "fused_computation" in name:
-            continue
-        ops = re.findall(r"(?m)=\s+\S+\s+([\w-]+)\(", body)
-        if len(ops) > len(best):
-            best = ops
-    free = ("get-tuple-element", "constant", "tuple", "parameter",
-            "bitcast")
-    return sum(1 for op in best if op not in free)
+    return while_body_kernels(txt)
 
 
 def _plan_spans(n: int, chunk: int,

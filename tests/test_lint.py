@@ -16,7 +16,8 @@ from pathlib import Path
 import pytest
 
 from tools.lint import RULES, run_lint
-from tools.lint.core import (Context, pragma_disabled, write_baseline)
+from tools.lint.core import (Context, pragma_disabled,
+                             pragma_justification, write_baseline)
 from tools.lint.rules.salt_drift import (normalized_fingerprint,
                                          update_salts)
 
@@ -26,10 +27,18 @@ BAD = TESTDATA / "bad"
 GOOD = TESTDATA / "good"
 TREES = TESTDATA / "trees"
 
+#: the default (stdlib-only, AST/text) family
 EXPECTED_RULES = {
     "doc-link", "env-validation", "except-breadth", "jit-purity",
     "module-docstring", "no-host-rng", "no-wall-clock", "salt-drift",
     "xp-generic",
+}
+
+#: the non-default jax-costing family (tools/graphlint); registered in
+#: the same registry, excluded from no---rules runs
+IR_RULES = {
+    "ir-budget-drift", "ir-donation", "ir-dtype-discipline",
+    "ir-graph-purity", "ir-retrace-surface",
 }
 
 
@@ -47,11 +56,15 @@ def cli(*args, cwd=REPO):
 
 class TestRegistry:
     def test_all_rules_registered(self):
-        assert set(RULES) == EXPECTED_RULES
+        assert set(RULES) == EXPECTED_RULES | IR_RULES
 
     def test_every_rule_states_its_contract(self):
         for rule in RULES.values():
             assert len(rule.contract) > 20, rule.name
+
+    def test_default_family_is_exactly_the_ast_rules(self):
+        assert {n for n, r in RULES.items() if r.default} == \
+            EXPECTED_RULES
 
 
 class TestViolatingFixtures:
@@ -101,6 +114,25 @@ class TestCleanFixtures:
         assert {f.rule for f in report.suppressed} == \
             {"no-host-rng", "except-breadth"}
 
+    def test_suppressed_findings_carry_justifications(self):
+        report = lint([GOOD / "pragma_good.py"])
+        assert report.suppressed_justifications == \
+            ["fixture"] * len(report.suppressed)
+
+    def test_suppressed_findings_in_json_output(self):
+        p = cli("--no-baseline", "--format", "json",
+                str(GOOD / "pragma_good.py"))
+        assert p.returncode == 0
+        data = json.loads(p.stdout)
+        assert data["findings"] == []
+        assert data["suppressed"] == 2
+        rows = data["suppressed_findings"]
+        assert {r["rule"] for r in rows} == \
+            {"no-host-rng", "except-breadth"}
+        for r in rows:
+            assert r["justification"] == "fixture"
+            assert r["path"].endswith("pragma_good.py") and r["line"]
+
 
 class TestZoneTrees:
     """Zone-scoped rules keyed off --root-relative paths."""
@@ -141,6 +173,15 @@ class TestPragmaParsing:
     def test_all_sentinel_and_absence(self):
         assert "all" in pragma_disabled("# repro-lint: disable=all")
         assert pragma_disabled("plain line # comment") == frozenset()
+
+    def test_justification_extracted_from_parens(self):
+        line = "x  # repro-lint: disable=no-host-rng (why: boundary)"
+        assert pragma_justification(line) == "why: boundary"
+
+    def test_justification_empty_when_absent(self):
+        assert pragma_justification(
+            "x  # repro-lint: disable=no-host-rng") == ""
+        assert pragma_justification("plain line") == ""
 
 
 class TestBaseline:
@@ -255,6 +296,81 @@ class TestSaltDrift:
         # from the docstring-free vs docstring'd module header
         assert same == normalized_fingerprint(
             '"""other doc"""\nx = 1\ny = x + 2   # note\n')
+
+
+def make_git_tree(tmp_path):
+    """A committed throwaway git repo with one clean lintable file."""
+    def git(*args):
+        subprocess.run(
+            ["git", "-c", "user.email=t@t", "-c", "user.name=t",
+             *args], cwd=tmp_path, check=True, capture_output=True)
+    (tmp_path / "mod.py").write_text('"""Clean module."""\n')
+    git("init", "-q")
+    git("add", "-A")
+    git("commit", "-q", "-m", "seed")
+    return tmp_path
+
+
+class TestChangedMode:
+    """``--changed``: lint only files touched since HEAD."""
+
+    def test_clean_worktree_lints_nothing(self, tmp_path):
+        make_git_tree(tmp_path)
+        p = cli("--changed", "--no-baseline", "--root", str(tmp_path))
+        assert p.returncode == 0, p.stdout + p.stderr
+        assert "no changed lintable files" in p.stdout
+
+    def test_modified_file_is_linted(self, tmp_path):
+        root = make_git_tree(tmp_path)
+        (root / "mod.py").write_text(textwrap.dedent('''\
+            """Module with a broad handler."""
+            try:
+                pass
+            except Exception:
+                pass
+        '''))
+        p = cli("--changed", "--no-baseline", "--root", str(root))
+        assert p.returncode == 1
+        assert "except-breadth" in p.stdout
+
+    def test_untracked_file_is_linted(self, tmp_path):
+        root = make_git_tree(tmp_path)
+        (root / "new.py").write_text(textwrap.dedent('''\
+            """Untracked module with a broad handler."""
+            try:
+                pass
+            except BaseException:
+                pass
+        '''))
+        p = cli("--changed", "--no-baseline", "--root", str(root))
+        assert p.returncode == 1
+        assert "new.py" in p.stdout
+
+    def test_changed_with_explicit_paths_is_an_error(self, tmp_path):
+        root = make_git_tree(tmp_path)
+        p = cli("--changed", "src", "--root", str(root))
+        assert p.returncode == 2
+        assert "--changed" in p.stderr
+
+    def test_outside_a_git_repo_is_invocation_error(self, tmp_path):
+        p = cli("--changed", "--root", str(tmp_path))
+        assert p.returncode == 2
+
+
+class TestCheckDocsShim:
+    def test_main_warns_deprecation_and_delegates(self):
+        import tools.check_docs as cd
+        with pytest.warns(DeprecationWarning, match="tools.lint"):
+            rc = cd.main([])
+        assert rc == 0
+
+    def test_warning_is_fatal_under_w_error(self):
+        p = subprocess.run(
+            [sys.executable, "-W", "error::DeprecationWarning",
+             "tools/check_docs.py"],
+            cwd=REPO, capture_output=True, text=True)
+        assert p.returncode != 0
+        assert "DeprecationWarning" in p.stderr
 
 
 class TestCli:

@@ -3,8 +3,9 @@
 The standalone checker this file used to contain was migrated into
 ``tools/lint`` as the ``doc-link`` and ``module-docstring`` rules (with
 wider docstring coverage: serving/, scenarios/, runtime/ and launch/
-joined core/ and experiments/).  This entry point survives so older CI
-configs and habits keep working — it simply runs those two rules over
+joined core/ and experiments/).  This entry point survives for one
+release so older CI configs and habits keep working — it emits a
+:class:`DeprecationWarning` and then simply runs those two rules over
 the default lint surface:
 
     python tools/check_docs.py
@@ -16,11 +17,23 @@ Prefer ``python -m tools.lint`` (all rules) going forward.
 from __future__ import annotations
 
 import sys
+import warnings
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
-from tools.lint.__main__ import main  # noqa: E402
+from tools.lint.__main__ import main as lint_main  # noqa: E402
+
+
+def main(argv=None) -> int:
+    warnings.warn(
+        "tools/check_docs.py is deprecated and will be removed; use "
+        "python -m tools.lint (or --rules doc-link,module-docstring "
+        "for exactly the old checks)",
+        DeprecationWarning, stacklevel=2)
+    return lint_main(["--rules", "doc-link,module-docstring"]
+                     + list(argv or []))
+
 
 if __name__ == "__main__":
-    sys.exit(main(["--rules", "doc-link,module-docstring"]))
+    sys.exit(main(sys.argv[1:]))

@@ -1,0 +1,33 @@
+"""graph-lint: jaxpr/IR-level contract checker for the engines.
+
+Where ``tools/lint`` (repro-lint) mechanizes the repo's *source-level*
+contracts by AST inspection, this package mechanizes the
+*compiled-graph* contracts the MESC overhead claims rest on: the
+lockstep while-body kernel budget, the dtype-homogeneous grouped
+carry, scenario neutrality of disabled fault components, buffer
+donation, CRN purity at the primitive level, and the O(1) retrace
+surface.  The pinned values live in the committed manifest
+``tools/graphlint/budgets.json``; drift is a lint finding, a
+conscious change is a manifest repin (``--update-budgets``), exactly
+mirroring the salt-drift workflow.
+
+Two entry points, one rule family:
+
+* ``python -m tools.graphlint`` — the dedicated front-end (traces,
+  compares, exits 0/1/2);
+* ``python -m tools.lint --rules ir-budget-drift,...`` — the same
+  rules through the repro-lint registry (they are non-default there,
+  keeping the stdlib-only lint job jax-free).
+
+``benchmarks/perf_sim.py`` sources its ``xla_kernels`` numbers from
+the same manifest via :func:`tools.graphlint.budgets.kernel_budget`.
+See docs/linting.md for the rule catalog.
+"""
+from tools.graphlint.budgets import (BUDGETS_REL, CANONICAL_CASE,  # noqa: F401
+                                     NEUTRAL_CASE, kernel_budget,
+                                     load_budgets, update_budgets)
+
+#: the rule family ``python -m tools.graphlint`` runs, in registry
+#: name order
+IR_RULES = ("ir-budget-drift", "ir-donation", "ir-dtype-discipline",
+            "ir-graph-purity", "ir-retrace-surface")

@@ -1,0 +1,108 @@
+"""CLI for graph-lint: ``python -m tools.graphlint``.
+
+Traces the committed manifest's engine cases, compares against the
+pinned budgets, and reports through the shared repro-lint machinery
+(same finding format, same exit codes: 0 clean, 1 findings, 2 bad
+invocation).  ``--update-budgets`` is the conscious-repin step; see
+docs/linting.md for the workflow.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from tools.graphlint import IR_RULES, budgets
+from tools.lint.core import RULES, LintConfigError, run_lint
+
+
+def default_root() -> Path:
+    """The repo root: this file lives at <root>/tools/graphlint/."""
+    return Path(__file__).resolve().parents[2]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.graphlint",
+        description="IR-level contract checker: traces the engines' "
+                    "compiled graphs and gates them against the "
+                    "committed budget manifest "
+                    f"({budgets.BUDGETS_REL})")
+    ap.add_argument("--root", type=Path, default=None,
+                    help="repo root whose manifest is checked "
+                         "(default: auto-detected; engines are always "
+                         "traced from the real checkout)")
+    ap.add_argument("--format", choices=("human", "json"),
+                    default="human")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated subset of the ir-* family "
+                         f"(default: {','.join(IR_RULES)})")
+    ap.add_argument("--cases", default=None,
+                    help="comma-separated manifest case subset to "
+                         "re-trace (plus the pseudo-case "
+                         f"'{budgets.RETRACE_CASE}'); default: all")
+    ap.add_argument("--update-budgets", action="store_true",
+                    help="re-trace everything and repin "
+                         f"{budgets.BUDGETS_REL} (the conscious-repin "
+                         "step, mirroring --update-salts)")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    root = (args.root or default_root()).resolve()
+    try:
+        import tools.lint.rules  # noqa: F401  (registers ir-* rules)
+
+        if args.list_rules:
+            for name in IR_RULES:
+                print(f"{name:20s} {RULES[name].contract}")
+            return 0
+
+        if args.update_budgets:
+            changed = budgets.update_budgets(root)
+            print(f"budgets re-pinned: {budgets.budgets_path(root)} "
+                  f"({len(changed)} field(s) changed"
+                  + (f": {', '.join(changed[:8])}"
+                     + (" ..." if len(changed) > 8 else "")
+                     if changed else "") + ")")
+            return 0
+
+        rule_names = (args.rules.split(",") if args.rules
+                      else list(IR_RULES))
+        unknown = sorted(set(rule_names) - set(IR_RULES))
+        if unknown:
+            raise LintConfigError(
+                f"unknown ir rule(s) {unknown}; available: "
+                f"{list(IR_RULES)}")
+
+        if budgets.load_budgets(root) is None:
+            raise LintConfigError(
+                f"no manifest at {budgets.budgets_path(root)} — "
+                "generate it first with python -m tools.graphlint "
+                "--update-budgets")
+
+        budgets.set_case_filter(args.cases.split(",") if args.cases
+                                else None)
+        try:
+            report, _ = run_lint(root, [str(budgets.BUDGETS_REL)],
+                                 rule_names=rule_names,
+                                 use_baseline=False)
+        finally:
+            budgets.set_case_filter(None)
+    except LintConfigError as e:
+        print(f"graph-lint: error: {e}", file=sys.stderr)
+        return 2
+
+    if args.format == "json":
+        print(json.dumps(report.to_json(), indent=1, sort_keys=True))
+        return report.exit_code
+
+    for f in report.findings:
+        print(f"{f.location()}: {f.rule}: {f.message}")
+    print(f"graph-lint: {len(report.rules_run)} rules over "
+          f"{budgets.BUDGETS_REL}: {len(report.findings)} finding(s)")
+    return report.exit_code
+
+
+if __name__ == "__main__":
+    sys.exit(main())

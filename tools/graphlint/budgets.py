@@ -1,0 +1,319 @@
+"""Budget manifests: the committed IR contract of the engines.
+
+``tools/graphlint/budgets.json`` pins, per representative engine
+configuration, what the compiler is allowed to build: while-body
+kernel count, primitive histogram, loop-carry inventory, donation
+evidence, dtype counters, the span planner's retrace surface, and the
+serving stack's zero-compilation contract.  The workflow mirrors the
+salt-drift rule exactly:
+
+* ``python -m tools.graphlint`` re-traces the manifest's cases and
+  fails on any divergence from the pinned budgets (rule family
+  ``ir-*``, anchored at the manifest file);
+* a *conscious* graph change is repinned with
+  ``python -m tools.graphlint --update-budgets`` — the manifest diff
+  then documents the regression or improvement in review, the same
+  way a salt bump documents a semantics change.
+
+The manifest is also the single source ``benchmarks/perf_sim.py``
+logs ``xla_kernels`` / ``xla_kernels_neutral_scenario`` from
+(:func:`kernel_budget`), so the perf trajectory in ``BENCH_sim.json``
+and the lint gate can never quote different numbers.
+
+Tracing always runs against the real checkout (see
+``tools/graphlint/trace.py``); a ``--root`` only selects which
+manifest file is read — that is what lets tests exercise tampered
+manifests on throwaway trees while sharing one set of (expensive)
+compiles through :func:`live_report`'s memo.
+"""
+from __future__ import annotations
+
+import copy
+import json
+from pathlib import Path
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+from tools.graphlint import trace
+from tools.lint.core import LintConfigError
+
+BUDGETS_REL = Path("tools/graphlint/budgets.json")
+BUDGETS_VERSION = 1
+
+#: the case perf_sim's ``xla_kernels`` field is sourced from, and the
+#: neutral-scenario case that must compile to the identical graph
+CANONICAL_CASE = "jit-mesc-sampled"
+NEUTRAL_CASE = "jit-mesc-neutral"
+
+#: live-only diagnostics never pinned in the manifest (purity is an
+#: absolute contract — an empty dict is the only acceptable value, so
+#: pinning it would just invite repinning a violation)
+UNPINNED_FIELDS = ("banned_primitives",)
+
+#: the manifest skeleton ``--update-budgets`` starts from when no
+#: manifest exists yet: the canonical corpus shape and the case
+#: configurations worth pinning.  One compile per distinct graph —
+#: the neutral case shares the canonical compile via the engine's
+#: ``_compiled_run`` memo.
+DEFAULT_MANIFEST: Dict[str, Any] = {
+    "version": BUDGETS_VERSION,
+    "spec": {
+        # fig8_corpus(utils, n_seeds, n_tasks): 64 points — the
+        # production _STREAM_CHUNK dispatch rectangle — at the
+        # default interrupt-table width
+        "utils": [0.7, 0.9], "n_seeds": 32, "n_tasks": 10,
+        "duration": 2.0e6, "overrun_prob": 0.3, "cf": 2.0,
+        "table_width": 64, "chunk": 64,
+    },
+    "cases": {
+        "jit-mesc-sampled": {
+            "config": {"policy": "mesc", "demand_profile": "sampled",
+                       "scenario": None, "devices": 1}},
+        "jit-mesc-neutral": {
+            "config": {"policy": "mesc", "demand_profile": "sampled",
+                       "scenario": "faults@0", "devices": 1},
+            "equals": "jit-mesc-sampled"},
+        "jit-mesc-active": {
+            "config": {"policy": "mesc", "demand_profile": "sampled",
+                       "scenario": "faults@1", "devices": 1}},
+        "jit-mesc-nominal": {
+            "config": {"policy": "mesc", "demand_profile": "nominal",
+                       "scenario": None, "devices": 1}},
+        "jit-np-sampled": {
+            "config": {"policy": "non_preemptive",
+                       "demand_profile": "sampled",
+                       "scenario": None, "devices": 1}},
+        "jit-mesc-sampled-d2": {
+            "config": {"policy": "mesc", "demand_profile": "sampled",
+                       "scenario": None, "devices": 2}},
+        "serving-virtual": {
+            "config": {"engine": "serving"}},
+    },
+}
+
+#: pseudo-case name selecting the retrace-surface computation in
+#: ``--cases`` filters
+RETRACE_CASE = "retrace"
+
+_case_filter: Optional[frozenset] = None
+
+#: (spec+configs key) -> live report; budgets-comparison tests all
+#: share the handful of real compiles behind one report
+_live_memo: Dict[str, Dict[str, Any]] = {}
+
+
+def set_case_filter(names: Optional[Iterable[str]]) -> None:
+    """Restrict which manifest cases the rules re-trace (None = all).
+    CLI ``--cases`` plumbing; rules read it via :func:`case_filter`."""
+    global _case_filter
+    _case_filter = None if names is None else frozenset(names)
+
+
+def case_filter() -> Optional[frozenset]:
+    return _case_filter
+
+
+def budgets_path(root: Optional[Path] = None) -> Path:
+    return Path(root or trace.REPO_ROOT) / BUDGETS_REL
+
+
+def load_budgets(root: Optional[Path] = None) -> Optional[Dict]:
+    """The committed manifest under ``root``, or None when absent
+    (rules stay silent on manifest-less trees — foreign checkouts
+    running ``--rules ir-*`` should not explode)."""
+    path = budgets_path(root)
+    if not path.exists():
+        return None
+    data = json.loads(path.read_text(encoding="utf-8"))
+    if data.get("version") != BUDGETS_VERSION:
+        raise LintConfigError(
+            f"{path}: budgets version {data.get('version')!r} != "
+            f"{BUDGETS_VERSION}; regenerate with "
+            "python -m tools.graphlint --update-budgets")
+    return data
+
+
+def _selected(manifest: Dict,
+              only: Optional[Iterable[str]]) -> List[str]:
+    names = list(manifest.get("cases", {}))
+    if only is not None:
+        wanted = set(only)
+        unknown = sorted(wanted - set(names) - {RETRACE_CASE})
+        if unknown:
+            raise LintConfigError(
+                f"unknown budget case(s) {unknown}; manifest has "
+                f"{sorted(names)} (plus '{RETRACE_CASE}')")
+        names = [n for n in names if n in wanted]
+    # serving first: its zero-compilation probe is only measurable
+    # before any engine trace initializes the XLA backend
+    return sorted(names,
+                  key=lambda n: (_engine(manifest, n) != "serving", n))
+
+
+def _engine(manifest: Dict, name: str) -> str:
+    return manifest["cases"][name]["config"].get("engine", "jit")
+
+
+def _memo_key(manifest: Dict, names: Sequence[str],
+              with_retrace: bool) -> str:
+    return json.dumps(
+        {"spec": manifest["spec"], "retrace": with_retrace,
+         "cases": {n: manifest["cases"][n]["config"] for n in names}},
+        sort_keys=True)
+
+
+def live_report(manifest: Dict,
+                only: Optional[Iterable[str]] = None) -> Dict[str, Any]:
+    """Re-trace the manifest's cases and return
+    ``{"cases": {name: live-budget}, "retrace": {...}}``.
+
+    Memoized on the (spec, case-config) content, NOT the manifest
+    path: tampering with a *pinned value* in a throwaway manifest
+    reuses the cached compiles, while changing a config or the corpus
+    spec re-traces.  Honors :func:`case_filter` unless ``only`` is
+    given explicitly.
+    """
+    if only is None:
+        only = _case_filter
+    names = _selected(manifest, only)
+    with_retrace = only is None or RETRACE_CASE in set(only)
+    key = _memo_key(manifest, names, with_retrace)
+    if key not in _live_memo:
+        trace.prepare_device_pool(max(
+            [int(manifest["cases"][n]["config"].get("devices") or 1)
+             for n in names] or [1]))
+        cases: Dict[str, Any] = {}
+        for name in names:
+            cfg = manifest["cases"][name]["config"]
+            if cfg.get("engine", "jit") == "serving":
+                n = trace.serving_compilations()
+                cases[name] = ({} if n is None
+                               else {"xla_compilations": n})
+            else:
+                cases[name] = trace.trace_jit_case(
+                    cfg, manifest["spec"])
+        report: Dict[str, Any] = {"cases": cases}
+        if with_retrace:
+            report["retrace"] = trace.retrace_surface(manifest["spec"])
+        _live_memo[key] = report
+    return _live_memo[key]
+
+
+# ----------------------------------------------------------------------
+# Budget diffing
+# ----------------------------------------------------------------------
+
+def flatten(prefix: str, value: Any,
+            out: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    """``{"carry.dtypes.ev_time": "float64", ...}`` — dotted leaf
+    paths, so findings can name the exact drifted field."""
+    if out is None:
+        out = {}
+    if isinstance(value, dict):
+        for k in sorted(value):
+            flatten(f"{prefix}.{k}" if prefix else str(k),
+                    value[k], out)
+    else:
+        out[prefix] = value
+    return out
+
+
+def diff_budget(pinned: Dict[str, Any], live: Dict[str, Any],
+                fields: Optional[Tuple[str, ...]] = None) \
+        -> List[Tuple[str, Any, Any]]:
+    """(field-path, pinned, live) rows where the two disagree,
+    optionally restricted to top-level ``fields`` prefixes.  Live-only
+    diagnostics (:data:`UNPINNED_FIELDS`) never count as drift."""
+    def keep(d):
+        return {k: v for k, v in d.items()
+                if k not in UNPINNED_FIELDS
+                and (fields is None or k in fields)}
+    a, b = flatten("", keep(pinned)), flatten("", keep(live))
+    rows: List[Tuple[str, Any, Any]] = []
+    for path in sorted(set(a) | set(b)):
+        missing = object()
+        pa, pb = a.get(path, missing), b.get(path, missing)
+        if pa != pb:
+            rows.append((path,
+                         None if pa is missing else pa,
+                         None if pb is missing else pb))
+    return rows
+
+
+def stored_budget(live: Dict[str, Any]) -> Dict[str, Any]:
+    """The manifest-persisted subset of one live budget."""
+    return {k: copy.deepcopy(v) for k, v in sorted(live.items())
+            if k not in UNPINNED_FIELDS}
+
+
+def update_budgets(root: Optional[Path] = None) -> List[str]:
+    """Re-trace everything and (re)write the manifest — the conscious
+    repin.  Returns the dotted paths whose pinned values changed.
+
+    The serving probe keeps its previous pin when unmeasurable in
+    this process (a jax backend already live); run the repin as a
+    fresh ``python -m tools.graphlint --update-budgets`` process for
+    an authoritative serving value.
+    """
+    global _case_filter
+    root = Path(root or trace.REPO_ROOT)
+    path = budgets_path(root)
+    manifest = load_budgets(root) or copy.deepcopy(DEFAULT_MANIFEST)
+    saved_filter, _case_filter = _case_filter, None   # repin everything
+    try:
+        live = live_report(manifest, only=None)
+    finally:
+        _case_filter = saved_filter
+    changed: List[str] = []
+    for name, case in manifest["cases"].items():
+        old = case.get("budget", {})
+        new = stored_budget(live["cases"][name])
+        if not new and old:        # unmeasurable serving probe
+            new = old
+        for fpath, _, _ in diff_budget(old, new):
+            changed.append(f"{name}.{fpath}")
+        case["budget"] = new
+    old_rt = manifest.get("retrace", {})
+    for fpath, _, _ in diff_budget(old_rt, live["retrace"]):
+        changed.append(f"{RETRACE_CASE}.{fpath}")
+    manifest["retrace"] = live["retrace"]
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(manifest, indent=1, sort_keys=True)
+                    + "\n", encoding="utf-8")
+    return sorted(changed)
+
+
+def kernel_budget(root: Optional[Path] = None) -> Dict[str, int]:
+    """The pinned while-body kernel counts perf_sim logs, verified
+    against a live compile before being returned.
+
+    Raises SystemExit (the perf harness's gate idiom) when the
+    compiled engine disagrees with the manifest or the neutral
+    scenario stops being graph-identical — a perf log must never
+    quote a kernel number the current build does not have.
+    """
+    manifest = load_budgets(root)
+    if manifest is None:
+        raise SystemExit(
+            f"no graph-lint manifest at {budgets_path(root)}; "
+            "generate it with python -m tools.graphlint "
+            "--update-budgets")
+    names = (CANONICAL_CASE, NEUTRAL_CASE)
+    live = live_report(manifest, only=names)["cases"]
+    out: Dict[str, int] = {}
+    for name in names:
+        pinned = manifest["cases"][name]["budget"]["while_body_kernels"]
+        got = live[name]["while_body_kernels"]
+        if got != pinned:
+            raise SystemExit(
+                f"graph-lint budget drift: {name}.while_body_kernels "
+                f"is pinned at {pinned} but the engine compiled {got} "
+                "— repin consciously with python -m tools.graphlint "
+                "--update-budgets")
+        out[name] = pinned
+    if out[CANONICAL_CASE] != out[NEUTRAL_CASE]:
+        raise SystemExit(
+            f"neutral scenario compiled {out[NEUTRAL_CASE]} body "
+            f"kernels vs {out[CANONICAL_CASE]} scenario-free — "
+            "disabled scenario components must add zero operations")
+    return {"xla_kernels": out[CANONICAL_CASE],
+            "xla_kernels_neutral_scenario": out[NEUTRAL_CASE]}

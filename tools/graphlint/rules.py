@@ -1,0 +1,242 @@
+"""The ``ir-*`` rule family: compiled-graph contracts as lint rules.
+
+These register into the same ``tools.lint.core.RULES`` registry as the
+AST rules, so ``python -m tools.lint --rules ir-budget-drift`` works —
+but they are **non-default** (``default = False``): the stdlib-only
+lint job must never import jax, and an IR trace costs seconds of
+compilation.  The dedicated front-end ``python -m tools.graphlint``
+selects exactly this family.
+
+Every rule compares the *live* trace of the manifest's cases (shared
+through :func:`tools.graphlint.budgets.live_report`'s memo — one set
+of compiles per process regardless of how many rules run) against the
+committed pins in ``tools/graphlint/budgets.json`` and anchors its
+findings at that manifest file, naming the case and the dotted field
+that drifted plus the ``--update-budgets`` conscious-repin step.
+
+Rules stay silent when no manifest exists under the lint root (the
+workflow for a fresh tree is ``--update-budgets`` first), and raise a
+configuration error (exit 2) when jax itself is unavailable — a
+missing toolchain is a broken invocation, not a clean graph.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Iterable, List, Optional, Tuple
+
+from tools.lint.core import Context, Finding, LintConfigError, Rule, \
+    register
+
+#: where findings anchor (root-relative; line 0 = file-level)
+ANCHOR = "tools/graphlint/budgets.json"
+
+REPIN = ("repin consciously with "
+         "python -m tools.graphlint --update-budgets")
+
+
+def _manifest_and_live(ctx: Context) \
+        -> Tuple[Optional[Dict], Optional[Dict]]:
+    from tools.graphlint import budgets
+    manifest = budgets.load_budgets(ctx.root)
+    if manifest is None:
+        return None, None
+    try:
+        live = budgets.live_report(manifest)
+    except ImportError as e:
+        raise LintConfigError(
+            f"ir-* rules need the jax toolchain to trace engines "
+            f"({e}); run in an installed environment via "
+            "python -m tools.graphlint") from e
+    return manifest, live
+
+
+def _drift_findings(rule: str, manifest: Dict, live: Dict,
+                    fields: Tuple[str, ...]) -> Iterable[Finding]:
+    """Pinned-vs-live findings for one rule's field slice, over every
+    traced case."""
+    from tools.graphlint import budgets
+    for name, got in sorted(live["cases"].items()):
+        if not got:                     # unmeasurable in-process probe
+            continue
+        pinned = manifest["cases"][name].get("budget", {})
+        for path, want, have in budgets.diff_budget(pinned, got,
+                                                    fields):
+            yield Finding(
+                rule=rule, path=ANCHOR, line=0,
+                message=(f"case {name}: {path} is pinned at {want!r} "
+                         f"but the compiled engine has {have!r} — "
+                         f"{REPIN}"))
+
+
+class IrRule(Rule):
+    """Base for the family: repo-level, non-default, no source files."""
+    default = False
+    suffixes: Tuple[str, ...] = ()
+
+
+@register
+class BudgetDriftRule(IrRule):
+    name = "ir-budget-drift"
+    contract = ("the compiled while-body kernel count, primitive "
+                "histogram and carry footprint of every manifest case "
+                "match tools/graphlint/budgets.json, and the neutral "
+                "scenario stays graph-identical to scenario-free")
+
+    FIELDS = ("while_body_kernels", "primitive_histogram")
+
+    def check_repo(self, ctx: Context) -> Iterable[Finding]:
+        from tools.graphlint import budgets
+        manifest, live = _manifest_and_live(ctx)
+        if manifest is None:
+            return
+        yield from _drift_findings(self.name, manifest, live,
+                                   self.FIELDS)
+        # carry bytes are budget (this rule); tensor count/dtypes are
+        # discipline (ir-dtype-discipline)
+        for name, got in sorted(live["cases"].items()):
+            pinned = manifest["cases"][name].get("budget", {})
+            want = pinned.get("carry", {}).get("total_bytes")
+            have = got.get("carry", {}).get("total_bytes")
+            if want != have:
+                yield Finding(
+                    rule=self.name, path=ANCHOR, line=0,
+                    message=(f"case {name}: carry.total_bytes is "
+                             f"pinned at {want!r} but the compiled "
+                             f"engine carries {have!r} — {REPIN}"))
+        # the committed neutrality contract: a case declaring
+        # equals=<other> must pin the identical budget (and therefore,
+        # via the drift checks above, compile identically live)
+        for name, case in sorted(manifest["cases"].items()):
+            other = case.get("equals")
+            if not other:
+                continue
+            for path, a, b in budgets.diff_budget(
+                    case.get("budget", {}),
+                    manifest["cases"][other].get("budget", {})):
+                yield Finding(
+                    rule=self.name, path=ANCHOR, line=0,
+                    message=(f"case {name} is declared graph-equal to "
+                             f"{other} but their pinned budgets "
+                             f"differ at {path} ({a!r} vs {b!r}) — "
+                             "a neutral scenario must compile out "
+                             "completely"))
+
+
+@register
+class DtypeDisciplineRule(IrRule):
+    name = "ir-dtype-discipline"
+    contract = ("the loop carry keeps its pinned tensor count and "
+                "per-tensor dtypes, and the x64 graphs contain no "
+                "float32 values or f64->f32 demotions beyond the "
+                "manifest pins")
+
+    FIELDS = ("carry", "float32_ops", "f64_to_f32_demotions")
+
+    def check_repo(self, ctx: Context) -> Iterable[Finding]:
+        from tools.graphlint import budgets
+        manifest, live = _manifest_and_live(ctx)
+        if manifest is None:
+            return
+        for name, got in sorted(live["cases"].items()):
+            if not got:                 # unmeasurable in-process probe
+                continue
+            pinned = manifest["cases"][name].get("budget", {})
+            for path, want, have in budgets.diff_budget(
+                    pinned, got, self.FIELDS):
+                if path == "carry.total_bytes":
+                    continue           # ir-budget-drift owns bytes
+                yield Finding(
+                    rule=self.name, path=ANCHOR, line=0,
+                    message=(f"case {name}: {path} is pinned at "
+                             f"{want!r} but the compiled engine has "
+                             f"{have!r} — {REPIN}"))
+
+
+@register
+class GraphPurityRule(IrRule):
+    name = "ir-graph-purity"
+    contract = ("compiled engine graphs contain no host callbacks, "
+                "transfers or traced-RNG (threefry) primitives, and "
+                "the serving virtual path stays under its pinned XLA-"
+                "compilation ceiling (eager transfer kernels only, "
+                "never a jitted computation)")
+
+    def check_repo(self, ctx: Context) -> Iterable[Finding]:
+        manifest, live = _manifest_and_live(ctx)
+        if manifest is None:
+            return
+        for name, got in sorted(live["cases"].items()):
+            for prim, count in sorted(
+                    got.get("banned_primitives", {}).items()):
+                yield Finding(
+                    rule=self.name, path=ANCHOR, line=0,
+                    message=(f"case {name}: banned primitive "
+                             f"{prim!r} appears {count}x in the "
+                             "traced graph — host callbacks, "
+                             "transfers and traced RNG break the "
+                             "pure-loop/CRN contract and cannot be "
+                             "repinned"))
+            pinned = manifest["cases"][name].get("budget", {})
+            if "xla_compilations" in pinned and got \
+                    and got.get("xla_compilations", 0) \
+                    > pinned["xla_compilations"]:
+                yield Finding(
+                    rule=self.name, path=ANCHOR, line=0,
+                    message=(f"case {name}: the serving virtual path "
+                             f"triggered {got['xla_compilations']} "
+                             "XLA compilation(s), above its pinned "
+                             f"ceiling of {pinned['xla_compilations']}"
+                             " (only the eager context-save/restore "
+                             "transfer kernels are allowed — a jitted "
+                             "model call must not enter the virtual "
+                             "path)"))
+
+
+@register
+class DonationRule(IrRule):
+    name = "ir-donation"
+    contract = ("the donated lockstep carry is actually donated: the "
+                "compiled modules keep their pinned input/output "
+                "alias count and raise zero donation-dropped "
+                "warnings")
+
+    FIELDS = ("donation",)
+
+    def check_repo(self, ctx: Context) -> Iterable[Finding]:
+        manifest, live = _manifest_and_live(ctx)
+        if manifest is None:
+            return
+        yield from _drift_findings(self.name, manifest, live,
+                                   self.FIELDS)
+
+
+@register
+class RetraceSurfaceRule(IrRule):
+    name = "ir-retrace-surface"
+    contract = ("the span planner's distinct traced signatures over "
+                "the shared corpora stay at their pinned O(1) counts "
+                "and never scale per-point (the mega-batching "
+                "precondition)")
+
+    def check_repo(self, ctx: Context) -> Iterable[Finding]:
+        from tools.graphlint import budgets
+        manifest, live = _manifest_and_live(ctx)
+        if manifest is None or "retrace" not in live:
+            return
+        pinned = manifest.get("retrace", {})
+        for path, want, have in budgets.diff_budget(pinned,
+                                                    live["retrace"]):
+            yield Finding(
+                rule=self.name, path=ANCHOR, line=0,
+                message=(f"retrace surface: {path} is pinned at "
+                         f"{want!r} but the span planner now yields "
+                         f"{have!r} — {REPIN}"))
+        for corpus, row in sorted(live["retrace"].items()):
+            if row["n_points"] > 1 \
+                    and row["signatures"] >= row["n_points"]:
+                yield Finding(
+                    rule=self.name, path=ANCHOR, line=0,
+                    message=(f"retrace surface: corpus {corpus} "
+                             f"retraces per point ({row['signatures']}"
+                             f" signatures for {row['n_points']} "
+                             "points) — bucketing has collapsed; "
+                             "this blocks mega-batching"))

@@ -7,18 +7,38 @@ from __future__ import annotations
 
 import argparse
 import json
+import subprocess
 import sys
 from pathlib import Path
 
-from tools.lint.core import (DEFAULT_BASELINE, DEFAULT_PATHS, RULES,
-                             LintConfigError, run_lint,
-                             write_baseline)
+from tools.lint.core import (DEFAULT_BASELINE, DEFAULT_PATHS,
+                             LINT_SUFFIXES, RULES, LintConfigError,
+                             run_lint, write_baseline)
 from tools.lint.rules.salt_drift import update_salts
 
 
 def default_root() -> Path:
     """The repo root: this file lives at <root>/tools/lint/."""
     return Path(__file__).resolve().parents[2]
+
+
+def changed_files(root: Path) -> list:
+    """Root-relative lintable files changed vs git HEAD, plus
+    untracked ones — the fast pre-commit surface for ``--changed``."""
+    out = []
+    for cmd in (["git", "diff", "--name-only", "HEAD"],
+                ["git", "ls-files", "--others", "--exclude-standard"]):
+        try:
+            proc = subprocess.run(cmd, cwd=root, capture_output=True,
+                                  text=True, check=True)
+        except (OSError, subprocess.CalledProcessError) as e:
+            raise LintConfigError(
+                f"--changed needs a git checkout at {root}: {e}")
+        out.extend(line.strip() for line in proc.stdout.splitlines()
+                   if line.strip())
+    return sorted({f for f in out
+                   if Path(f).suffix in LINT_SUFFIXES
+                   and (root / f).is_file()})
 
 
 def main(argv=None) -> int:
@@ -43,11 +63,24 @@ def main(argv=None) -> int:
                     help="grandfather the current findings and exit 0")
     ap.add_argument("--update-salts", action="store_true",
                     help="re-pin tools/lint/salts.json surface hashes")
+    ap.add_argument("--changed", action="store_true",
+                    help="lint only files changed vs git HEAD (plus "
+                         "untracked) — the fast pre-commit mode")
     ap.add_argument("--list-rules", action="store_true")
     args = ap.parse_args(argv)
 
     root = (args.root or default_root()).resolve()
     try:
+        if args.changed:
+            if args.paths:
+                raise LintConfigError(
+                    "--changed selects its own files; drop the "
+                    "explicit path arguments")
+            args.paths = changed_files(root)
+            if not args.paths:
+                print("repro-lint: no changed lintable files")
+                return 0
+
         if args.list_rules:
             import tools.lint.rules  # noqa: F401
             for name in sorted(RULES):

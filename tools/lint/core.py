@@ -129,11 +129,18 @@ class Rule:
     """Base rule: subclass, set ``name``/``contract``, implement
     ``check_source`` (per selected file) and/or ``check_repo`` (once
     per run, for rules whose surface is fixed repo state rather than
-    the CLI selection)."""
+    the CLI selection).
+
+    ``default = False`` keeps a rule out of the no-``--rules`` run
+    while leaving it selectable by name — that is how the jax-costing
+    ``ir-*`` family (``tools/graphlint``) shares this registry without
+    breaking the stdlib-only CI lint job.
+    """
 
     name: str = ""
     contract: str = ""
     suffixes: Tuple[str, ...] = (".py",)
+    default: bool = True
 
     def check_source(self, src: Source,
                      ctx: Context) -> Iterable[Finding]:
@@ -228,6 +235,18 @@ def pragma_disabled(line_text: str) -> frozenset:
         return frozenset()
     return frozenset(p.strip() for p in m.group(1).split(",")
                      if p.strip())
+
+
+def pragma_justification(line_text: str) -> str:
+    """The parenthesized justification following a pragma's rule list
+    (``# repro-lint: disable=r (why: ...)``), or "" when the author
+    left none — surfaced in the JSON report so suppressed findings
+    stay auditable instead of silently vanishing."""
+    m = PRAGMA_RE.search(line_text)
+    if not m:
+        return ""
+    j = re.match(r"\s*\(([^)]*)\)", line_text[m.end():])
+    return j.group(1).strip() if j else ""
 
 
 def fingerprint(finding: Finding, line_text: str) -> str:
@@ -330,6 +349,10 @@ class Report:
     stale_baseline: List[Dict]         # entries that no longer match
     checked_files: int
     rules_run: List[str]
+    #: per-suppressed-finding justification text, parallel to
+    #: ``suppressed`` (a pragma without one contributes "")
+    suppressed_justifications: List[str] = \
+        dataclasses.field(default_factory=list)
 
     @property
     def exit_code(self) -> int:
@@ -339,6 +362,10 @@ class Report:
         return {
             "findings": [dataclasses.asdict(f) for f in self.findings],
             "suppressed": len(self.suppressed),
+            "suppressed_findings": [
+                {**dataclasses.asdict(f), "justification": j}
+                for f, j in zip(self.suppressed,
+                                self.suppressed_justifications)],
             "baselined": len(self.baselined),
             "stale_baseline": self.stale_baseline,
             "checked_files": self.checked_files,
@@ -370,7 +397,7 @@ def run_lint(root: Path, paths: Sequence[str],
                 f"{sorted(RULES)}")
         active = {n: RULES[n] for n in rule_names}
     else:
-        active = dict(RULES)
+        active = {n: r for n, r in RULES.items() if r.default}
 
     raw: List[Finding] = []
     parsed: Dict[Path, Source] = {}
@@ -400,6 +427,7 @@ def run_lint(root: Path, paths: Sequence[str],
     # pragma suppression (same-line, line-anchored findings only)
     kept: List[Finding] = []
     suppressed: List[Finding] = []
+    justifications: List[str] = []
     for f in raw:
         text = ""
         if f.line:
@@ -410,6 +438,7 @@ def run_lint(root: Path, paths: Sequence[str],
         disabled = pragma_disabled(text)
         if f.line and ("all" in disabled or f.rule in disabled):
             suppressed.append(f)
+            justifications.append(pragma_justification(text))
         else:
             kept.append(f)
 
@@ -436,4 +465,5 @@ def run_lint(root: Path, paths: Sequence[str],
     return Report(findings=kept, suppressed=suppressed,
                   baselined=baselined, stale_baseline=stale,
                   checked_files=len(files),
-                  rules_run=sorted(active)), ctx
+                  rules_run=sorted(active),
+                  suppressed_justifications=justifications), ctx

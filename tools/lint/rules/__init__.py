@@ -1,5 +1,15 @@
 """Rule modules register themselves into ``tools.lint.core.RULES`` at
-import time; importing this package activates the full registry."""
+import time; importing this package activates the full registry.
+
+The IR-level ``ir-*`` family lives in ``tools.graphlint.rules`` and
+registers here too (non-default, so the stdlib-only lint job never
+pays for it); the guard keeps the AST rules usable when this package
+is vendored without its sibling."""
 from tools.lint.rules import (docs, env_validation, except_breadth,  # noqa: F401
                               host_rng, jit_purity, salt_drift,
                               wall_clock, xp_generic)
+
+try:
+    from tools.graphlint import rules as _ir_rules  # noqa: F401
+except ImportError:                  # vendored without tools/graphlint
+    pass
